@@ -1,0 +1,53 @@
+"""PS-DSF as the cluster scheduler over a heterogeneous TPU fleet.
+
+Job demand vectors are derived from the dry-run artifacts (bytes/device +
+collective traffic), closing the loop between the roofline analysis and the
+scheduler. A pod failure triggers the elastic re-allocation path.
+
+Run:  PYTHONPATH=src python examples/cluster_schedule.py
+"""
+from pathlib import Path
+
+from repro.ft import ElasticController
+from repro.sched import (Cluster, TPUPod, TenantJob, job_from_artifact,
+                         schedule)
+
+pods = [
+    TPUPod("v5e-pod0", "v5e", 256, 16, 512, 1600, 100),
+    TPUPod("v5e-pod1", "v5e", 256, 16, 512, 1600, 100),
+    TPUPod("v5e-pod2", "v5e", 256, 16, 512, 1600, 100),
+    TPUPod("v5p-pod0", "v5p", 128, 95, 768, 2400, 200),
+]
+
+jobs = []
+art = Path("artifacts/dryrun/qwen3_1_7b_train_4k_single.json")
+if art.exists():
+    jobs.append(job_from_artifact("qwen3-train", str(art), weight=2.0))
+    print(f"derived {jobs[-1].name} demand from dry-run artifact: "
+          f"hbm={jobs[-1].hbm_gb:.0f}GB ici={jobs[-1].ici_gbps:.0f}GB/s")
+jobs += [
+    TenantJob("grok-moe-train", 1.0, 128, 1800, 64, 600, 40,
+              min_hbm_per_chip=0),
+    TenantJob("vl-72b-serve", 1.0, 64, 5800, 32, 200, 10,
+              min_hbm_per_chip=90),     # KV + params need v5p HBM
+    TenantJob("musicgen-batch", 0.5, 32, 300, 16, 100, 0),
+]
+
+cluster = Cluster(pods)
+print("\ninitial PS-DSF allocation (replicas/job):")
+for name, x in schedule(cluster, jobs).items():
+    print(f"  {name:18s} {x:8.2f}")
+
+ctl = ElasticController(cluster, jobs, lambda c, j: schedule(c, j),
+                        heartbeat_timeout_s=10)
+for p in pods:
+    ctl.monitor.beat(p.name, 0.0)
+for p in pods:
+    if p.name != "v5e-pod1":
+        ctl.monitor.beat(p.name, 20.0)
+
+print("\nv5e-pod1 misses heartbeats -> elastic re-allocation:")
+alloc = ctl.on_tick(25.0, {})
+for name, x in alloc.items():
+    print(f"  {name:18s} {x:8.2f}")
+print("\nevents:", [(e.reason, e.worker) for e in ctl.events])

@@ -1,0 +1,49 @@
+"""Multi-tenant serving with PS-DSF admission — the paper's Section V
+dynamics at the serving layer.
+
+Three tenants share two heterogeneous replica groups (one supports 32k
+context, one only 4k — a placement constraint). Tenant 'rag-32k' goes
+inactive mid-run and returns, exercising the distributed per-group ticks.
+
+Run:  PYTHONPATH=src python examples/multi_tenant_serving.py
+"""
+import numpy as np
+
+from repro.sched import DynamicDispatcher, ReplicaGroup, Tenant
+from repro.configs import get_smoke_config
+from repro.serve import ServingEngine
+
+groups = [ReplicaGroup("g-long", 64, 256, 50_000, max_context=32768),
+          ReplicaGroup("g-short", 128, 128, 80_000, max_context=4096)]
+tenants = [Tenant("chat", 1.0, 4096, 0.5, 2048),
+           Tenant("rag-32k", 1.0, 32768, 4.0, 16384),
+           Tenant("batch", 2.0, 4096, 0.5, 512)]
+
+disp = DynamicDispatcher(groups, tenants)
+util = []
+for t in range(30):
+    if t == 10:
+        disp.set_active("rag-32k", False)
+    if t == 20:
+        disp.set_active("rag-32k", True)
+    disp.tick()
+    u = disp.utilization()
+    util.append(u.mean())
+    if t in (5, 15, 25):
+        print(f"tick {t:2d}: quotas={ {k: round(sum(v.values()), 1) for k, v in disp.quotas().items()} } "
+              f"mean-util={u.mean():.2f}")
+
+print("\nutilization recovers after churn:", 
+      f"{util[5]:.2f} -> {util[15]:.2f} (rag away) -> {util[25]:.2f}")
+
+# --- and the actual token-level engine on a reduced model --------------------
+cfg = get_smoke_config("musicgen_large")
+eng = ServingEngine(cfg, max_slots=4, max_len=64,
+                    tenant_weights={"gold": 2.0, "free": 1.0})
+rng = np.random.default_rng(0)
+for i in range(8):
+    eng.submit("gold" if i % 2 else "free",
+               list(rng.integers(0, cfg.vocab_size, 8)), max_new_tokens=6)
+done = eng.run(max_steps=80)
+print(f"engine completed {len(done)}/8 requests "
+      f"({sum(len(r.out_tokens) for r in done)} tokens)")

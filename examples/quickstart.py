@@ -1,0 +1,43 @@
+"""Quickstart: the paper's mechanism in 40 lines.
+
+1. Solve the paper's Figure-1 instance with PS-DSF and the baselines.
+2. Train a reduced LM for 30 steps through the full framework stack
+   (data pipeline -> sharded train step -> checkpointing).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (AllocationProblem, solve_psdsf_rdm, solve_tsf,
+                        solve_cdrfh)
+
+# --- the paper's Figure 1 -----------------------------------------------------
+problem = AllocationProblem(
+    demands=np.array([[1.0, 2.0, 10.0],     # user 1: CPU, RAM, bandwidth
+                      [1.0, 2.0, 1.0],      # user 2
+                      [1.0, 2.0, 0.0]]),    # user 3 (no bandwidth)
+    capacities=np.array([[9.0, 12.0, 100.0],   # server 1
+                         [12.0, 12.0, 0.0]]),  # server 2 (no bandwidth)
+    weights=np.array([1.0, 1.0, 2.0]))
+
+alloc, info = solve_psdsf_rdm(problem)
+print("PS-DSF tasks/user:", alloc.tasks_per_user, f"(converged in {info.rounds} rounds)")
+print("TSF   tasks/user:", solve_tsf(problem).tasks_per_user)
+print("C-DRFH tasks/user:", solve_cdrfh(problem).tasks_per_user)
+print("-> PS-DSF gives the bottleneck-fair (3, 3, 6); the baselines do not.\n")
+
+# --- end-to-end training through the framework -------------------------------
+from repro.configs import get_smoke_config
+from repro.data import DataConfig
+from repro.train import OptimizerConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+cfg = get_smoke_config("qwen3_1_7b")
+trainer = Trainer(cfg,
+                  OptimizerConfig(peak_lr=3e-3, warmup_steps=3, decay_steps=30),
+                  TrainerConfig(total_steps=30, ckpt_every=15, log_every=10,
+                                ckpt_dir="artifacts/quickstart_ckpt"),
+                  DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                             global_batch=4))
+out = trainer.run()
+print(f"trained 30 steps: loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")

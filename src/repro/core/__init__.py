@@ -1,0 +1,19 @@
+"""PS-DSF core: the paper's allocation mechanism and its baselines."""
+from .types import Allocation, AllocationProblem
+from .gamma import (dominant_resource, gamma_constrained_total, gamma_matrix,
+                    gamma_unconstrained_total, normalized_vds, vds)
+from .psdsf import (algorithm1_literal, server_fill_rdm, server_fill_tdm,
+                    solve_psdsf_rdm, solve_psdsf_tdm, SolveInfo)
+from .baselines import (solve_cdrf, solve_cdrfh, solve_drf_single_pool,
+                        solve_tsf, uniform_allocation)
+from .dynamic import DistributedPSDSF
+
+__all__ = [
+    "Allocation", "AllocationProblem", "SolveInfo",
+    "gamma_matrix", "dominant_resource", "vds", "normalized_vds",
+    "gamma_unconstrained_total", "gamma_constrained_total",
+    "solve_psdsf_rdm", "solve_psdsf_tdm", "algorithm1_literal",
+    "server_fill_rdm", "server_fill_tdm",
+    "solve_cdrfh", "solve_tsf", "solve_cdrf", "solve_drf_single_pool",
+    "uniform_allocation", "DistributedPSDSF",
+]

@@ -1,0 +1,158 @@
+"""Baseline allocation mechanisms the paper compares against (Section II).
+
+All global-share mechanisms (DRF-on-a-pool, C-DRFH, TSF, CDRF) are instances
+of one progressive filler: every user n has a *level* x_n / (phi_n w_n) for a
+mechanism-specific score weight w_n, and the filler raises the minimum level,
+placing marginal tasks greedily on the eligible server with most headroom
+(best-fit spill — reproduces the paper's worked examples in Section II-B).
+
+  C-DRFH:  w_n = 1 / max_r d[n,r] / (sum_i c[i,r])   (constraint-oblivious
+           global dominant share, Eq. 5 with pooled capacities)
+  TSF:     w_n = gamma_n ignoring placement constraints [14]
+  CDRF:    w_n = gamma_n honoring placement constraints [4]
+  DRF:     single pooled server (no placement), the original NSDI'11 mechanism
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .gamma import (gamma_constrained_total, gamma_matrix,
+                    gamma_unconstrained_total)
+from .types import Allocation, AllocationProblem
+
+_TOL = 1e-9
+
+
+def uniform_allocation(problem: AllocationProblem) -> Allocation:
+    """Every user gets phi_n / sum_m phi_m of each resource on every server
+    (the sharing-incentive reference point; ineligible shares are wasted)."""
+    g = gamma_matrix(problem)
+    share = problem.weights / problem.weights.sum()
+    return Allocation(problem, g * share[:, None])
+
+
+def _greedy_level_fill(
+    problem: AllocationProblem,
+    score_weight: np.ndarray,      # (N,) w_n; level_n = x_n / (phi_n w_n)
+    num_steps: int = 4000,
+) -> np.ndarray:
+    """Weighted max-min on levels with greedy best-fit placement.
+
+    epsilon-increment simulation: each step advances every user currently at
+    the minimum level by d_level = horizon/num_steps, placing tasks on the
+    eligible server with the largest per-task headroom. Users freeze when no
+    eligible server has room. Exact enough for the paper's examples at the
+    default resolution (error O(1/num_steps)).
+    """
+    d = problem.demands
+    cap = problem.capacities.copy()
+    phi = problem.weights
+    g = gamma_matrix(problem)
+    n, k = problem.num_users, problem.num_servers
+    x = np.zeros((n, k))
+    free = cap.copy()
+    w = np.where(score_weight > 0, score_weight, 0.0)
+    fillable = w > 0
+    # horizon: max possible level if a user monopolized everything
+    with np.errstate(divide="ignore", invalid="ignore"):
+        horizon = np.nanmax(np.where(
+            fillable, gamma_constrained_total(problem) / (phi * np.maximum(w, 1e-300)),
+            np.nan))
+    if not np.isfinite(horizon) or horizon <= 0:
+        horizon = 1.0
+    d_level = horizon / num_steps
+    frozen = ~fillable
+    levels = np.zeros(n)
+
+    for _ in range(num_steps + n * k):
+        if frozen.all():
+            break
+        active = ~frozen
+        lvl_min = levels[active].min()
+        grow = active & (levels <= lvl_min + d_level * 0.5)
+        progressed = False
+        for u in np.nonzero(grow)[0]:
+            want = phi[u] * w[u] * d_level          # tasks to add this step
+            remaining = want
+            while remaining > want * 1e-6:
+                # headroom (in tasks) for user u on each eligible server
+                with np.errstate(divide="ignore", invalid="ignore"):
+                    ratio = np.where(d[u][None, :] > 0,
+                                     free / np.maximum(d[u], 1e-300)[None, :],
+                                     np.inf)
+                head = np.where(g[u] > 0, ratio.min(axis=1), -np.inf)
+                best = int(np.argmax(head))
+                amount = min(remaining, max(head[best], 0.0))
+                if amount <= want * 1e-9:
+                    frozen[u] = True
+                    break
+                x[u, best] += amount
+                free[best] -= amount * d[u]
+                remaining -= amount
+            placed = want - max(remaining, 0.0)
+            if placed > 0:
+                levels[u] += placed / (phi[u] * w[u])
+                progressed = True
+        if not progressed:
+            break
+    return x
+
+
+def solve_cdrfh(problem: AllocationProblem, num_steps: int = 4000) -> Allocation:
+    """C-DRFH: strategy-proof DRFH extension that ignores constraints when
+    identifying the dominant resource (Section II-B)."""
+    pooled = problem.capacities.sum(axis=0)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        maxd = np.max(problem.demands / np.maximum(pooled[None, :], 1e-300),
+                      axis=1)
+    w = np.where(maxd > 0, 1.0 / np.maximum(maxd, 1e-300), 0.0)
+    return Allocation(problem, _greedy_level_fill(problem, w, num_steps))
+
+
+def solve_tsf(problem: AllocationProblem, num_steps: int = 4000) -> Allocation:
+    """TSF [14]: max-min on x_n / gamma_n with gamma_n constraint-oblivious."""
+    w = gamma_unconstrained_total(problem)
+    return Allocation(problem, _greedy_level_fill(problem, w, num_steps))
+
+
+def solve_cdrf(problem: AllocationProblem, num_steps: int = 4000) -> Allocation:
+    """CDRF [4]: max-min on x_n / gamma_n, gamma honoring constraints."""
+    w = gamma_constrained_total(problem)
+    return Allocation(problem, _greedy_level_fill(problem, w, num_steps))
+
+
+def solve_drf_single_pool(problem: AllocationProblem) -> np.ndarray:
+    """Original DRF on the pooled capacities (no placement constraints).
+
+    Exact progressive filling (event-driven): all users share one server whose
+    capacity is sum_i c_i. Returns x_n (N,). Used for single-server instances
+    (PS-DSF must reduce to DRF there) and property references.
+    """
+    d = problem.demands
+    cap = problem.capacities.sum(axis=0)
+    phi = problem.weights
+    n, r_cnt = d.shape
+    with np.errstate(divide="ignore", invalid="ignore"):
+        maxd = np.max(d / np.maximum(cap[None, :], 1e-300), axis=1)
+    rate = phi / np.maximum(maxd, 1e-300)          # dx/dL, L = dominant share/phi
+    active = np.ones(n, dtype=bool)
+    x = np.zeros(n)
+    usage = np.zeros(r_cnt)
+    level = 0.0
+    for _ in range(r_cnt + 1):
+        if not active.any():
+            break
+        slopes = np.einsum("n,nr->r", rate * active, d)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            lr = np.where(slopes > 1e-300, (cap - usage) / slopes, np.inf)
+        r_star = int(np.argmin(lr))
+        dl = lr[r_star]
+        if not np.isfinite(dl):
+            break
+        x = x + rate * active * dl
+        usage = usage + slopes * dl
+        level += dl
+        sat = lr <= lr[r_star] + _TOL
+        newly = active & (d[:, sat].sum(axis=1) > 0)
+        active &= ~newly
+    return x

@@ -1,0 +1,64 @@
+"""Distributed / asynchronous PS-DSF (Section III-D and the Section V
+experiment).
+
+Each server executes the *server procedure* independently every T seconds
+using only (a) its local capacities and (b) the global task counts x_n.
+``DistributedPSDSF`` models this: ``tick(servers)`` rebuilds the chosen
+servers' allocations (all servers = one synchronous round; subsets/permuted
+orders = asynchronous execution). User churn (arrivals/departures) is
+supported by an activity mask — exactly the Section V experiment where user 4
+is inactive during (100, 250) s.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional, Sequence
+
+import numpy as np
+
+from .gamma import gamma_matrix
+from .psdsf import server_fill_rdm, server_fill_tdm
+from .types import Allocation, AllocationProblem
+
+
+class DistributedPSDSF:
+    def __init__(self, problem: AllocationProblem, mode: str = "rdm",
+                 seed: int = 0):
+        if mode not in ("rdm", "tdm"):
+            raise ValueError(mode)
+        self.problem = problem
+        self.mode = mode
+        self.gamma = gamma_matrix(problem)
+        self.x = np.zeros((problem.num_users, problem.num_servers))
+        self.active = np.ones(problem.num_users, dtype=bool)
+        self._rng = np.random.default_rng(seed)
+
+    # -- churn -------------------------------------------------------------
+    def set_active(self, user: int, active: bool) -> None:
+        self.active[user] = active
+        if not active:
+            self.x[user, :] = 0.0      # departing user releases its tasks
+
+    # -- the per-server procedure -------------------------------------------
+    def tick(self, servers: Optional[Iterable[int]] = None,
+             shuffle: bool = False) -> None:
+        p = self.problem
+        idx: Sequence[int] = (range(p.num_servers) if servers is None
+                              else list(servers))
+        if shuffle:
+            idx = list(idx)
+            self._rng.shuffle(idx)
+        for i in idx:
+            gamma_i = np.where(self.active, self.gamma[:, i], 0.0)
+            x_ext = self.x.sum(axis=1) - self.x[:, i]
+            if self.mode == "rdm":
+                self.x[:, i] = server_fill_rdm(
+                    p.capacities[i], p.demands, p.weights, gamma_i, x_ext)
+            else:
+                self.x[:, i] = server_fill_tdm(
+                    p.demands, p.weights, gamma_i, x_ext)
+
+    def allocation(self) -> Allocation:
+        return Allocation(self.problem, self.x.copy())
+
+    def utilization(self) -> np.ndarray:
+        return self.allocation().utilization()

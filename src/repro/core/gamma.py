@@ -1,0 +1,77 @@
+"""Per-server monopolization counts, dominant resources and virtual dominant shares.
+
+Implements Eqs. (6)-(8) of the paper.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .types import AllocationProblem
+
+_EPS = 1e-300
+
+
+def gamma_matrix(problem: AllocationProblem) -> np.ndarray:
+    """gamma[n, i] = delta[n, i] * min_{r: d[n,r]>0} c[i, r] / d[n, r]   (Eq. 7).
+
+    A user demanding a resource a server lacks (c == 0) gets gamma == 0, i.e.
+    is implicitly ineligible — consistent with the paper's example (user 2
+    demands bandwidth, server 2 has none).
+    """
+    d = problem.demands            # (N, R)
+    c = problem.capacities         # (K, R)
+    # ratio[n, i, r] = c[i, r] / d[n, r] where d > 0 else +inf
+    with np.errstate(divide="ignore"):
+        ratio = c[None, :, :] / np.where(d > 0, d, np.inf)[:, None, :]
+    ratio = np.where(d[:, None, :] > 0, ratio, np.inf)
+    g = ratio.min(axis=2)
+    g = np.where(np.isfinite(g), g, 0.0)
+    return g * problem.eligibility
+
+
+def dominant_resource(problem: AllocationProblem) -> np.ndarray:
+    """rho[n, i] = argmax_r d[n, r] / c[i, r]   (Eq. 6). Returns -1 if ineligible."""
+    d = problem.demands
+    c = problem.capacities
+    with np.errstate(divide="ignore", invalid="ignore"):
+        frac = d[:, None, :] / np.maximum(c[None, :, :], _EPS)
+    frac = np.where(c[None, :, :] > 0, frac, np.inf)     # missing resource dominates
+    frac = np.where(d[:, None, :] > 0, frac, -np.inf)    # only demanded resources
+    rho = frac.argmax(axis=2)
+    g = gamma_matrix(problem)
+    return np.where(g > 0, rho, -1)
+
+
+def vds(problem: AllocationProblem, x: np.ndarray) -> np.ndarray:
+    """Virtual dominant share s[n, i] = x_n / gamma[n, i]   (Eq. 8).
+
+    Ineligible (gamma == 0) entries are +inf so that mins over servers work.
+    """
+    g = gamma_matrix(problem)
+    xn = np.asarray(x).sum(axis=1)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        s = xn[:, None] / np.where(g > 0, g, np.nan)
+    return np.where(g > 0, s, np.inf)
+
+
+def normalized_vds(problem: AllocationProblem, x: np.ndarray) -> np.ndarray:
+    """s[n, i] / phi[n] — the quantity PS-DSF max-min balances."""
+    return vds(problem, x) / problem.weights[:, None]
+
+
+def gamma_unconstrained_total(problem: AllocationProblem) -> np.ndarray:
+    """TSF's gamma_n: tasks monopolizing ALL servers as if there were no
+    placement constraints [14] (capacity-zero servers still contribute 0)."""
+    d = problem.demands
+    c = problem.capacities
+    with np.errstate(divide="ignore"):
+        ratio = c[None, :, :] / np.where(d > 0, d, np.inf)[:, None, :]
+    ratio = np.where(d[:, None, :] > 0, ratio, np.inf)
+    g = ratio.min(axis=2)
+    g = np.where(np.isfinite(g), g, 0.0)
+    return g.sum(axis=1)
+
+
+def gamma_constrained_total(problem: AllocationProblem) -> np.ndarray:
+    """CDRF's gamma_n: tasks monopolizing the whole cluster, honoring delta."""
+    return gamma_matrix(problem).sum(axis=1)

@@ -1,0 +1,154 @@
+"""Sharing-property checkers (Section II-A / Theorem 3).
+
+Each checker returns (ok: bool, detail: str). Used by unit + hypothesis tests
+and by the benchmark harness to certify allocations.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .gamma import gamma_matrix
+from .types import Allocation, AllocationProblem
+
+_RTOL = 1e-6
+
+
+def check_feasible_rdm(alloc: Allocation, tol: float = 1e-6) -> tuple[bool, str]:
+    """Eq. (9): sum_n x[n,i] d[n,r] <= c[i,r]; x >= 0; eligibility respected."""
+    p, x = alloc.problem, alloc.x
+    if (x < -tol).any():
+        return False, "negative allocation"
+    g = gamma_matrix(p)
+    if (x[g <= 0] > tol).any():
+        return False, "tasks on ineligible server"
+    usage = alloc.usage
+    cap = p.capacities
+    scale = np.maximum(cap, np.maximum(cap.max(initial=1.0) * 1e-6, 1e-12))
+    if (usage > cap + tol * scale).any():
+        worst = float(((usage - cap) / scale).max())
+        return False, f"capacity violated by rel {worst:.2e}"
+    return True, "feasible"
+
+
+def check_feasible_tdm(alloc: Allocation, tol: float = 1e-6) -> tuple[bool, str]:
+    """Eq. (10): sum_n x[n,i]/gamma[n,i] <= 1 per server."""
+    p, x = alloc.problem, alloc.x
+    ok, msg = check_feasible_rdm(alloc, tol)     # TDM implies RDM (Eq. 11)
+    if not ok:
+        return ok, msg
+    g = gamma_matrix(p)
+    share = np.where(g > 0, x / np.maximum(g, 1e-300), 0.0).sum(axis=0)
+    if (share > 1 + tol).any():
+        return False, f"TDM time-share exceeded: max {share.max():.6f}"
+    return True, "feasible (TDM)"
+
+
+def check_sharing_incentive(alloc: Allocation, tol: float = 1e-6) -> tuple[bool, str]:
+    """x_n >= sum_i (phi_n / sum_m phi_m) gamma[n,i]  (generalized SI, §III-B)."""
+    p = alloc.problem
+    g = gamma_matrix(p)
+    share = p.weights / p.weights.sum()
+    entitled = (g * share[:, None]).sum(axis=1)
+    got = alloc.tasks_per_user
+    slack = got - entitled
+    scale = np.maximum(entitled, 1e-12)
+    if (slack < -tol * scale - 1e-9).any():
+        n = int(np.argmin(slack / scale))
+        return False, (f"user {n}: got {got[n]:.6f} < uniform {entitled[n]:.6f}")
+    return True, "sharing incentive holds"
+
+
+def utility_of(problem: AllocationProblem, n: int, a: np.ndarray) -> float:
+    """U_n(a) = min_{r: d[n,r] > 0} a_r / d[n,r]   (Eq. 1)."""
+    d = problem.demands[n]
+    mask = d > 0
+    return float(np.min(a[mask] / d[mask]))
+
+
+def check_envy_freeness(alloc: Allocation, tol: float = 1e-6) -> tuple[bool, str]:
+    """Constrained envy freeness: U_n(phi_n/phi_m * a_m|eligible(n)) <= x_n.
+
+    With placement constraints the comparison only ranges over the portion of
+    m's allocation sitting on servers *n is eligible for* — user n could not
+    run tasks on the rest even if handed those resources. This is exactly the
+    scope of the paper's Theorem 3 proof (Eqs. 27-29 consider servers i with
+    x[m,i] > 0 through gamma[n,i], which is defined only for eligible i).
+    Without constraints it reduces to the classic definition.
+    """
+    p = alloc.problem
+    g = gamma_matrix(p)
+    xn = alloc.tasks_per_user
+    for n in range(p.num_users):
+        elig = g[n] > 0
+        for m in range(p.num_users):
+            if m == n:
+                continue
+            a_m = alloc.x[m, elig].sum() * p.demands[m]
+            if a_m.max(initial=0.0) <= 0:
+                continue
+            u = utility_of(p, n, (p.weights[n] / p.weights[m]) * a_m)
+            if u > xn[n] + tol * max(1.0, xn[n]):
+                return False, f"user {n} envies {m}: {u:.6f} > {xn[n]:.6f}"
+    return True, "envy free (constrained)"
+
+
+def check_pareto_tdm(alloc: Allocation, tol: float = 1e-6) -> tuple[bool, str]:
+    """Theorem 2 necessary condition: Eq. (10) tight on servers with eligible
+    users, and every served user sits at the server's minimum normalized VDS."""
+    p, x = alloc.problem, alloc.x
+    g = gamma_matrix(p)
+    xn = x.sum(axis=1)
+    for i in range(p.num_servers):
+        elig = g[:, i] > 0
+        if not elig.any():
+            continue
+        share = float((x[elig, i] / g[elig, i]).sum())
+        if abs(share - 1.0) > tol:
+            return False, f"server {i}: time-share {share:.6f} != 1"
+        s_norm = xn[elig] / (g[elig, i] * p.weights[elig])
+        s_min = s_norm.min()
+        served = x[elig, i] > tol
+        if (s_norm[served] > s_min + tol * max(1.0, s_min)).any():
+            return False, f"server {i}: served user above min VDS"
+    return True, "Pareto/TDM fixed-point condition holds"
+
+
+def check_bottleneck_structure_rdm(alloc: Allocation, tol: float = 1e-5) -> tuple[bool, str]:
+    """Theorem 1: every user has a bottleneck resource w.r.t. every eligible
+    server — r with d[n,r]>0, saturated, and no holder of r has higher
+    normalized VDS than user n."""
+    p, x = alloc.problem, alloc.x
+    g = gamma_matrix(p)
+    d = p.demands
+    xn = x.sum(axis=1)
+    usage = alloc.usage
+    cap = p.capacities
+    scale = np.maximum(cap, np.maximum(cap.max(initial=1.0) * 1e-6, 1e-12))
+    s_norm = np.where(g > 0, xn[:, None] / np.maximum(g * p.weights[:, None],
+                                                      1e-300), np.inf)
+    for i in range(p.num_servers):
+        sat = usage[i] >= cap[i] - tol * scale[i]
+        for n in range(p.num_users):
+            if g[n, i] <= 0:
+                continue
+            found = False
+            for r in range(p.num_resources):
+                if d[n, r] <= 0 or not sat[r]:
+                    continue
+                holders = (x[:, i] * d[:, r] > tol) & (np.arange(p.num_users) != n)
+                if not holders.any() or \
+                        s_norm[holders, i].max() <= s_norm[n, i] * (1 + _RTOL) + tol:
+                    found = True
+                    break
+            if not found:
+                return False, f"user {n} has no bottleneck at server {i}"
+    return True, "bottleneck structure holds (Theorem 1)"
+
+
+def weighted_max_min_check(values: np.ndarray, weights: np.ndarray,
+                           reference: np.ndarray, tol: float = 1e-4) -> bool:
+    """Sorted normalized vectors agree => same (weighted) max-min solution."""
+    a = np.sort(values / weights)
+    b = np.sort(reference / weights)
+    scale = np.maximum(np.abs(b), 1.0)
+    return bool((np.abs(a - b) <= tol * scale).all())

@@ -1,0 +1,174 @@
+"""Jitted, fully-vectorized PS-DSF solver (RDM and TDM).
+
+Same math as ``psdsf.py`` (server-procedure rebuild to fixed point), expressed
+with ``lax`` control flow so the whole solve jits; used by the cluster
+scheduler at scale (10^4 users x 10^3 servers ticks) and by the
+``kernels/psdsf_vds`` Pallas op for the per-tick VDS reduction.
+
+All loops have static bounds: the inner fill runs exactly R+1 saturation
+events; the outer sweep runs ``max_rounds`` with early-exit via
+``lax.while_loop`` on the residual.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .gamma import gamma_matrix
+from .types import Allocation, AllocationProblem
+
+_BIG = 1e30
+_TOL = 1e-9
+
+
+def _fill_one_server_rdm(cap, demands, phi, gamma_i, x_ext):
+    """Vectorized equivalent of psdsf.server_fill_rdm. All jnp, no Python
+    branching on values. Shapes: cap (R,), demands (N,R), rest (N,)."""
+    n, r_cnt = demands.shape
+    eligible = gamma_i > 0
+    rate = jnp.where(eligible, phi * gamma_i, 0.0)
+    floor = jnp.where(eligible, x_ext / jnp.maximum(rate, 1e-300), _BIG)
+
+    def body(_, carry):
+        x_i, active, saturated, frozen_usage, level = carry
+        any_active = active.any()
+        rate_a = jnp.where(active, rate, 0.0)
+        floor_a = jnp.where(active, floor, _BIG)
+        order = jnp.argsort(floor_a)
+        f_s = floor_a[order]
+        slope = (demands * rate_a[:, None])[order]                 # (N, R)
+        cum_slope = jnp.cumsum(slope, axis=0)
+        cum_sf = jnp.cumsum(slope * f_s[:, None], axis=0)
+        usage_bp = cum_slope * f_s[:, None] - cum_sf + frozen_usage[None, :]
+        # candidate crossing level per (breakpoint k, resource r)
+        safe_slope = jnp.maximum(cum_slope, 1e-300)
+        cand = f_s[:, None] + (cap[None, :] - usage_bp) / safe_slope
+        nxt = jnp.concatenate([f_s[1:], jnp.full((1,), _BIG)])[:, None]
+        valid = (cum_slope > _TOL) & (cand <= nxt + _TOL)
+        cand = jnp.where(valid, jnp.maximum(cand, f_s[:, None]), _BIG)
+        lr = cand.min(axis=0)                                      # (R,)
+        lr = jnp.where(saturated, _BIG, lr)
+        best = lr.min()
+        best = jnp.maximum(best, level)
+        bind = (lr <= best * (1 + 1e-12) + _TOL) & ~saturated
+        new_x = jnp.where(active, rate * jnp.maximum(0.0, best - floor), x_i)
+        newly_frozen = active & ((demands * bind[None, :]).sum(axis=1) > 0)
+        new_frozen_usage = frozen_usage + jnp.einsum(
+            "n,nr->r", jnp.where(newly_frozen, new_x, 0.0), demands)
+        # If nothing is active (or nothing can bind) keep the carry unchanged.
+        ok = any_active & (best < _BIG * 0.5)
+        x_i = jnp.where(ok, new_x, x_i)
+        frozen_usage = jnp.where(ok, new_frozen_usage, frozen_usage)
+        saturated = jnp.where(ok, saturated | bind, saturated)
+        active = jnp.where(ok, active & ~newly_frozen, active)
+        level = jnp.where(ok, best, level)
+        return x_i, active, saturated, frozen_usage, level
+
+    cap_scale = jnp.maximum(1.0, cap.max())
+    init = (jnp.zeros(n), eligible, cap <= _TOL * cap_scale,
+            jnp.zeros(r_cnt), 0.0)
+    x_i, *_ = jax.lax.fori_loop(0, r_cnt + 1, body, init)
+    return x_i
+
+
+def _fill_one_server_tdm(demands, phi, gamma_i, x_ext):
+    """TDM: single virtual resource sum x/gamma <= 1."""
+    del demands
+    eligible = gamma_i > 0
+    rate = jnp.where(eligible, phi, 0.0)                 # d(x/gamma)/dL
+    floor = jnp.where(eligible,
+                      x_ext / jnp.maximum(phi * gamma_i, 1e-300), _BIG)
+    order = jnp.argsort(floor)
+    f_s = floor[order]
+    rt_s = rate[order]
+    cum_rt = jnp.cumsum(rt_s)
+    cum_rf = jnp.cumsum(rt_s * f_s)
+    usage_bp = cum_rt * f_s - cum_rf
+    cand = f_s + (1.0 - usage_bp) / jnp.maximum(cum_rt, 1e-300)
+    nxt = jnp.concatenate([f_s[1:], jnp.full((1,), _BIG)])
+    valid = (cum_rt > _TOL) & (cand <= nxt + _TOL)
+    level = jnp.where(valid, jnp.maximum(cand, f_s), _BIG).min()
+    has = eligible.any()
+    x = jnp.where(eligible & has,
+                  phi * gamma_i * jnp.maximum(0.0, level - floor), 0.0)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "max_rounds"))
+def psdsf_solve_jax(demands, capacities, weights, gamma, *,
+                    mode: str = "rdm", max_rounds: int = 256,
+                    tol: float = 1e-6):
+    """Solve PS-DSF. Returns (x (N,K), rounds, residual).
+
+    ``gamma`` is the (N, K) eligibility-masked monopolization matrix; compute
+    it with ``repro.core.gamma_matrix`` (or its jnp twin below). Same
+    adaptive damping as the numpy solver (limit-cycle mitigation).
+    """
+    n, k = gamma.shape
+    scale = jnp.maximum(1.0, gamma.max())
+
+    def one_round(x, alpha):
+        def per_server(i, x):
+            x_ext = x.sum(axis=1) - x[:, i]
+            if mode == "rdm":
+                xi = _fill_one_server_rdm(
+                    capacities[i], demands, weights, gamma[:, i], x_ext)
+            else:
+                xi = _fill_one_server_tdm(
+                    demands, weights, gamma[:, i], x_ext)
+            return x.at[:, i].set((1.0 - alpha) * x[:, i] + alpha * xi)
+        return jax.lax.fori_loop(0, k, per_server, x)
+
+    def cond(carry):
+        _, rounds, resid, _, _ = carry
+        return (rounds < max_rounds) & (resid > tol * scale)
+
+    def body(carry):
+        x, rounds, prev_resid, alpha, _ = carry
+        x_new = one_round(x, alpha)
+        resid = jnp.abs(x_new - x).max()
+        stall = (rounds >= 8) & (resid > 0.98 * prev_resid) & (alpha > 0.15)
+        alpha = jnp.where(stall, alpha * 0.7, alpha)
+        return x_new, rounds + 1, resid, alpha, resid
+
+    x0 = jnp.zeros((n, k), dtype=jnp.float64 if demands.dtype == jnp.float64
+                   else jnp.float32)
+    big = jnp.array(jnp.inf, dtype=x0.dtype)
+    x, rounds, resid, _, _ = jax.lax.while_loop(
+        cond, body, (x0, jnp.array(0), big, jnp.array(1.0, x0.dtype), big))
+    return x, rounds, resid
+
+
+def gamma_matrix_jnp(demands, capacities, eligibility):
+    """jnp twin of gamma.gamma_matrix (for end-to-end jitted pipelines)."""
+    d = demands
+    ratio = jnp.where(d[:, None, :] > 0,
+                      capacities[None, :, :] / jnp.maximum(d[:, None, :], 1e-300),
+                      _BIG)
+    g = ratio.min(axis=2)
+    g = jnp.where(g >= _BIG * 0.5, 0.0, g)
+    return g * eligibility
+
+
+def solve_psdsf_rdm_jax(problem: AllocationProblem,
+                        max_rounds: int = 64) -> Allocation:
+    """Convenience wrapper producing the same container as the numpy solver."""
+    g = gamma_matrix(problem)
+    x, _, _ = psdsf_solve_jax(
+        jnp.asarray(problem.demands), jnp.asarray(problem.capacities),
+        jnp.asarray(problem.weights), jnp.asarray(g),
+        mode="rdm", max_rounds=max_rounds)
+    return Allocation(problem, np.asarray(x, dtype=np.float64))
+
+
+def solve_psdsf_tdm_jax(problem: AllocationProblem,
+                        max_rounds: int = 64) -> Allocation:
+    g = gamma_matrix(problem)
+    x, _, _ = psdsf_solve_jax(
+        jnp.asarray(problem.demands), jnp.asarray(problem.capacities),
+        jnp.asarray(problem.weights), jnp.asarray(g),
+        mode="tdm", max_rounds=max_rounds)
+    return Allocation(problem, np.asarray(x, dtype=np.float64))

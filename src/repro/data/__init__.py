@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, SyntheticTokenPipeline, global_batch_at

@@ -1,0 +1,2 @@
+from .failures import (ElasticController, HeartbeatMonitor, RestartEvent,
+                       StragglerDetector)

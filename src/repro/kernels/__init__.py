@@ -1,0 +1,10 @@
+"""Pallas TPU kernels (BlockSpec VMEM tiling), validated in interpret mode.
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jitted
+model-layout wrapper) and ref.py (independent pure-jnp oracle):
+
+  flash_attention  — causal GQA FlashAttention (train/prefill hot spot)
+  decode_attention — split-KV flash decoding over the KV cache
+  ssd_scan         — Mamba-2 chunked SSD scan
+  psdsf_vds        — the paper's per-server VDS min/argmin tick (Eq. 16)
+"""

@@ -1,0 +1,20 @@
+"""Jitted wrapper: model-native cache layout -> grouped kernel layout."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import decode_attention_grouped
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, num_kv_heads: int,
+                     block_k: int = 512, interpret: bool = False):
+    """q: (B, 1, Hq, D); k/v_cache: (B, S, Hkv, D); kv_len: () int32.
+    Returns (B, 1, Hq, D)."""
+    b, _, hq, d = q.shape
+    rep = hq // num_kv_heads
+    qg = q[:, 0].reshape(b, num_kv_heads, rep, d)
+    kt = jnp.swapaxes(k_cache, 1, 2)           # (B, Hkv, S, D)
+    vt = jnp.swapaxes(v_cache, 1, 2)
+    out = decode_attention_grouped(qg, kt, vt, kv_len, block_k=block_k,
+                                   interpret=interpret)
+    return out.reshape(b, 1, hq, d)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for decode_attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, kv_len, *, sm_scale: float | None = None):
+    """q: (B, Hkv, rep, D); k, v: (B, Hkv, S, D); kv_len scalar."""
+    d = q.shape[-1]
+    s = k.shape[2]
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("bhrd,bhkd->bhrk", q.astype(jnp.float32) * sm_scale,
+                        k.astype(jnp.float32))
+    valid = jnp.arange(s) < kv_len
+    scores = jnp.where(valid[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhrk,bhkd->bhrd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

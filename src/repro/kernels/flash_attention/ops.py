@@ -1,0 +1,26 @@
+"""Jitted public wrapper for the flash-attention kernel.
+
+Accepts the model-native layout (B, S, H, D) and handles the transpose.
+``interpret=True`` executes the kernel body on CPU (how this container
+validates it); on a real TPU deployment ``repro.models.attention`` routes
+through this op when ``cfg.use_pallas`` is set by the launcher.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = 512, block_k: int = 512,
+                    sm_scale: float | None = None,
+                    interpret: bool = False):
+    """q: (B, S, Hq, D); k, v: (B, S, Hkv, D) -> (B, S, Hq, D)."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, block_q=block_q,
+                               block_k=block_k, sm_scale=sm_scale,
+                               interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,4 @@
+"""Jitted wrapper used by the cluster scheduler's jitted tick."""
+from __future__ import annotations
+
+from .kernel import vds_argmin  # noqa: F401 (public op == kernel entry)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the per-server VDS reduction (Eq. 16)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BIG = 3.0e38
+
+
+def vds_argmin_ref(x_over_phi, gamma):
+    """x_over_phi: (N,); gamma: (N, K) -> (min (K,), argmin (K,) i32)."""
+    snorm = jnp.where(gamma > 0,
+                      x_over_phi[:, None] / jnp.where(gamma > 0, gamma, 1.0),
+                      BIG)
+    return snorm.min(axis=0), snorm.argmin(axis=0).astype(jnp.int32)

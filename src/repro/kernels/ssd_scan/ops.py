@@ -1,0 +1,17 @@
+"""Jitted wrapper: model layout (B, S, H, P) -> kernel layout (B, H, S, P)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import ssd_scan
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, *, chunk: int = 128,
+                interpret: bool = False):
+    """Same contract as repro.models.ssm._ssd_chunked's core (without the D
+    skip and gating, which stay in the layer): x (B, S, H, P), dt (B, S, H),
+    a (H,), b/c (B, S, N) -> y (B, S, H, P)."""
+    xt = jnp.transpose(x, (0, 2, 1, 3))
+    dtt = jnp.transpose(dt, (0, 2, 1))
+    y = ssd_scan(xt, dtt, a, b_mat, c_mat, chunk=chunk, interpret=interpret)
+    return jnp.transpose(y, (0, 2, 1, 3))

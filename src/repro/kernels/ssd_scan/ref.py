@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for ssd_scan: the exact sequential SSM recurrence
+    state_t = state_{t-1} * exp(dt_t a) + dt_t x_t b_t^T
+    y_t     = C_t . state_t
+(one timestep at a time — independent of the chunked algorithm)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, a, b_mat, c_mat):
+    """x: (B, H, S, P); dt: (B, H, S); a: (H,); b/c: (B, S, N)."""
+    bsz, h, s, p_dim = x.shape
+    n = b_mat.shape[-1]
+
+    def step(state, t):
+        dta = dt[:, :, t] * a[None, :]                       # (B, H)
+        upd = (dt[:, :, t, None, None] * x[:, :, t, :, None]
+               * b_mat[:, None, t, None, :])                 # (B, H, P, N)
+        state = state * jnp.exp(dta)[:, :, None, None] + upd
+        y_t = jnp.einsum("bhpn,bn->bhp", state, c_mat[:, t])
+        return state, y_t
+
+    state0 = jnp.zeros((bsz, h, p_dim, n), jnp.float32)
+    _, ys = jax.lax.scan(step, state0,
+                         jnp.arange(s))
+    return jnp.moveaxis(ys, 0, 2).astype(x.dtype)            # (B, H, S, P)

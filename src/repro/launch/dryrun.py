@@ -1,0 +1,371 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first init). Everything below is ordinary code.
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import gc            # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (ARCH_IDS, SHAPES, get_config,  # noqa: E402
+                           shape_applicable)
+from repro.launch import hlo as hlo_mod  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.sharding import (ShardingOptions, batch_specs,  # noqa: E402
+                                   cache_specs, named, opt_state_specs,
+                                   param_specs, sanitize_specs, token_specs)
+from repro.launch.specs import input_specs  # noqa: E402
+from repro.train.optimizer import OptimizerConfig  # noqa: E402
+from repro.train.step import (abstract_train_state, build_decode_step,  # noqa: E402
+                              build_prefill_step, build_train_step)
+from repro.models import abstract_params  # noqa: E402
+
+
+def _mesh_name(multi_pod: bool) -> str:
+    return "multi" if multi_pod else "single"
+
+
+def _compile_cell(cfg, shape, mesh, multi_pod: bool,
+                  opts: ShardingOptions, microbatches: int):
+    """Build + lower + compile the step for one config; returns compiled +
+    timings."""
+    oc = OptimizerConfig(state_dtype=cfg.opt_state_dtype)
+    pspec = param_specs(cfg, mesh, opts)
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            step = build_train_step(cfg, oc, microbatches=microbatches)
+            state_abs = abstract_train_state(cfg, oc)
+            batch_abs = input_specs(cfg, shape)["batch"]
+            state_spec = {"params": pspec, "opt": opt_state_specs(pspec)}
+            state_spec = sanitize_specs(state_spec, state_abs, mesh)
+            bspec = sanitize_specs(
+                batch_specs(cfg, mesh, "train", opts), batch_abs, mesh)
+            jitted = jax.jit(
+                step,
+                in_shardings=(named(mesh, state_spec), named(mesh, bspec)),
+                out_shardings=(named(mesh, state_spec),
+                               NamedSharding(mesh, P())),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_abs, batch_abs)
+        elif shape.kind == "prefill":
+            step = build_prefill_step(cfg)
+            params_abs = abstract_params(cfg)
+            batch_abs = input_specs(cfg, shape)["batch"]
+            pspec = sanitize_specs(pspec, params_abs, mesh)
+            bspec = sanitize_specs(
+                batch_specs(cfg, mesh, "prefill", opts), batch_abs, mesh)
+            out_abs = jax.eval_shape(step, params_abs, batch_abs)
+            logits_spec = P(("pod", "data") if multi_pod else ("data",),
+                            "model")
+            cspec = cache_specs(cfg, mesh, shape.global_batch, opts)
+            out_spec = sanitize_specs((logits_spec, cspec), out_abs, mesh)
+            jitted = jax.jit(
+                step,
+                in_shardings=(named(mesh, pspec), named(mesh, bspec)),
+                out_shardings=named(mesh, out_spec),
+            )
+            lowered = jitted.lower(params_abs, batch_abs)
+        else:  # decode
+            step = build_decode_step(cfg)
+            params_abs = abstract_params(cfg)
+            spec_in = input_specs(cfg, shape)
+            pspec = sanitize_specs(pspec, params_abs, mesh)
+            cspec = sanitize_specs(
+                cache_specs(cfg, mesh, shape.global_batch, opts),
+                spec_in["caches"], mesh)
+            tspec = token_specs(mesh, shape.global_batch, opts)
+            big = shape.global_batch >= opts.shard_cache_seq_threshold
+            dpa = ("pod", "data") if multi_pod else ("data",)
+            logits_spec = P(dpa, "model") if big else P(None, "model")
+            jitted = jax.jit(
+                step,
+                in_shardings=(named(mesh, pspec), named(mesh, cspec),
+                              NamedSharding(mesh, tspec),
+                              NamedSharding(mesh, P())),
+                out_shardings=(NamedSharding(mesh, tspec),
+                               NamedSharding(mesh, logits_spec),
+                               named(mesh, cspec)),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params_abs, spec_in["caches"],
+                                   spec_in["token"], spec_in["pos"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    del lowered, jitted
+    return compiled, t_lower, t_compile
+
+
+def _analyze(compiled):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    cost = {k: float(v) for k, v in dict(cost).items()
+            if isinstance(v, (int, float))}
+    text = compiled.as_text()
+    coll = hlo_mod.collective_bytes(text)
+    hist = hlo_mod.op_histogram(text)
+    del text
+    mem = compiled.memory_analysis()
+    mem_fields = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        mem_fields[f] = int(getattr(mem, f, 0) or 0)
+    return cost, coll, hist, mem_fields
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               opts: ShardingOptions = ShardingOptions(),
+               microbatches: int = 1, cfg_overrides: dict | None = None):
+    """Lower + compile one (arch x shape x mesh) cell; return analysis dict.
+
+    XLA's HloCostAnalysis counts ops inside a ``while`` body ONCE, so a
+    scanned layer stack under-reports FLOPs/bytes/collectives by ~G (the
+    group count). We therefore additionally compile G=1 and G=2 variants of
+    the same cell (cheap — tiny modules) and extrapolate linearly:
+        total(G) = v(1) + (G - 1) * (v(2) - v(1)),
+    which is exact because the scanned body is identical per group. The full
+    module is still compiled for memory_analysis() and to prove the cell
+    lowers + fits.
+    """
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # Activation-sharding constraints: batch over dp axes (except batch-1
+    # decode, where the cache is sequence-sharded instead), wide dims over TP.
+    dpa = ("pod", "data") if multi_pod else ("data",)
+    small_batch = (shape.kind == "decode"
+                   and shape.global_batch < opts.shard_cache_seq_threshold)
+    act_axes = {"dp_axes": () if small_batch else dpa, "tp_axis": "model"}
+    act_axes.update(cfg_overrides or {})
+    # Long-sequence prefill lowers through the flash-jnp path (online softmax
+    # over KV blocks) so the reference path does not materialize S^2 scores.
+    base_cfg = get_config(arch)
+    if (shape.kind == "prefill" and shape.seq_len >= 8192
+            and base_cfg.has_mixer("attn")):
+        act_axes["attn_flash_block"] = 2048
+    cfg = get_config(arch, **act_axes)
+    plen = len(cfg.block_pattern)
+
+    compiled, t_lower, t_compile = _compile_cell(
+        cfg, shape, mesh, multi_pod, opts, microbatches)
+    cost_f, coll_f, hist, mem_fields = _analyze(compiled)
+    del compiled
+    gc.collect()
+
+    g_total = cfg.groups
+    if g_total > 1:
+        # UNROLLED probes: with lax.scan the loop body is byte-identical for
+        # G=1 and G=2 (only the trip count changes), so cost_analysis would
+        # report v(2) == v(1). Unrolling makes the per-group delta real.
+        cfg1 = get_config(arch, num_layers=plen, scan_groups=False,
+                          **act_axes)
+        cfg2 = get_config(arch, num_layers=2 * plen, scan_groups=False,
+                          **act_axes)
+        comp1, _, _ = _compile_cell(cfg1, shape, mesh, multi_pod, opts,
+                                    microbatches)
+        cost1, coll1, _, _ = _analyze(comp1)
+        del comp1
+        gc.collect()
+        comp2, _, _ = _compile_cell(cfg2, shape, mesh, multi_pod, opts,
+                                    microbatches)
+        cost2, coll2, _, _ = _analyze(comp2)
+        del comp2
+        gc.collect()
+
+        def extrap(v1, v2):
+            return v1 + (g_total - 1) * (v2 - v1)
+
+        cost = {k: extrap(cost1.get(k, 0.0), cost2.get(k, 0.0))
+                for k in set(cost1) | set(cost2)}
+        coll = {}
+        for k in coll_f:
+            coll[k] = {
+                "bytes": extrap(coll1[k]["bytes"], coll2[k]["bytes"]),
+                "wire_bytes": extrap(coll1[k]["wire_bytes"],
+                                     coll2[k]["wire_bytes"]),
+                "count": extrap(coll1[k]["count"], coll2[k]["count"]),
+            }
+    else:
+        cost, coll = cost_f, coll_f
+
+    # Analytic correction for the flash-jnp KV scan: HloCostAnalysis counts
+    # the scanned body once, i.e. one KV block of the n_trips = S/block; the
+    # remaining (n_trips - 1) trips are added in closed form (the two block
+    # matmuls QK^T and PV: 4*B*S*block*Hq*hd flops; K/V/Q + running-stats
+    # traffic for bytes). Applied per attention layer, per device.
+    flash_corr = {}
+    if cfg.attn_flash_block and shape.kind != "decode":
+        blk = cfg.attn_flash_block
+        n_trips = shape.seq_len // blk
+        attn_layers = cfg.groups * sum(1 for b in cfg.block_pattern
+                                       if b[0] == "attn")
+        bsz, s_len = shape.global_batch, shape.seq_len
+        # occurrences of the scanned loops per step:
+        #   prefill: 1 forward;  train: 2 forwards (fwd + remat recompute
+        #   inside the group bwd) + 1 custom-vjp backward (5 block matmuls).
+        fwd_occ = 1 if shape.kind == "prefill" else 2
+        bwd_occ = 0 if shape.kind == "prefill" else 1
+        fwd_trip_flops = 4.0 * bsz * s_len * blk * cfg.q_dim
+        bwd_trip_flops = 10.0 * bsz * s_len * blk * cfg.q_dim
+        fwd_trip_bytes = (2.0 * bsz * blk * cfg.kv_dim * 2      # K,V block
+                          + bsz * s_len * cfg.q_dim * 2          # Q re-read
+                          + 3.0 * bsz * cfg.num_heads * s_len * blk * 4)
+        per_trip_flops = fwd_occ * fwd_trip_flops + bwd_occ * bwd_trip_flops
+        per_trip_bytes = (fwd_occ + 2 * bwd_occ) * fwd_trip_bytes
+        dev = mesh.size
+        flash_corr = {
+            "n_trips": n_trips, "fwd_occ": fwd_occ, "bwd_occ": bwd_occ,
+            "extra_flops_per_dev": attn_layers * (n_trips - 1)
+                                   * per_trip_flops / dev,
+            "extra_bytes_per_dev": attn_layers * (n_trips - 1)
+                                   * per_trip_bytes / dev,
+        }
+        cost["flops"] = cost.get("flops", 0.0) + flash_corr["extra_flops_per_dev"]
+        if "bytes accessed" in cost:
+            cost["bytes accessed"] += flash_corr["extra_bytes_per_dev"]
+
+    # The microbatch accumulation loop is a lax.scan (counted once by
+    # HloCostAnalysis); every microbatch body is identical, so scale
+    # flops/bytes/collectives by the microbatch count. (The once-per-step
+    # optimizer update gets scaled too — <0.5% error at these sizes.)
+    # Only train steps have a microbatch loop.
+    if microbatches > 1 and shape.kind == "train":
+        for key in ("flops", "bytes accessed"):
+            if key in cost:
+                cost[key] *= microbatches
+        for c in coll.values():
+            c["bytes"] *= microbatches
+            c["wire_bytes"] *= microbatches
+            c["count"] *= microbatches
+
+    n_params = cfg.param_count()
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    if shape.kind == "train":
+        model_flops = 6 * n_active * tokens
+    else:
+        model_flops = 2 * n_active * tokens
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": _mesh_name(multi_pod),
+        "kind": shape.kind, "devices": int(mesh.size),
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "params": int(n_params), "active_params": int(n_active),
+        "tokens_per_step": int(tokens), "model_flops": float(model_flops),
+        "cost_analysis": cost,
+        "cost_analysis_raw_full": cost_f,
+        "memory_analysis": mem_fields,
+        "collectives": coll,
+        "collectives_raw_full": coll_f,
+        "op_histogram": hist,
+        "flash_correction": flash_corr,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "sharding_options": dataclasses.asdict(opts),
+        "cfg_overrides": cfg_overrides or {},
+        "microbatches": microbatches,
+        "ok": True,
+    }
+    gc.collect()
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run driver")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every applicable (arch x shape) cell")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--opt", action="append", default=[],
+                    help="ShardingOptions override, e.g. --opt fsdp_params=0")
+    ap.add_argument("--cfg", action="append", default=[],
+                    help="ModelConfig override, e.g. --cfg moe_impl=gather "
+                         "or --cfg attn_flash_block=1024 or --cfg remat=dots")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.opt:
+        k, v = kv.split("=")
+        field_types = {f.name: f.type for f
+                       in dataclasses.fields(ShardingOptions)}
+        if field_types[k] in ("bool", bool):
+            overrides[k] = v in ("1", "true", "True")
+        elif field_types[k] in ("int", int):
+            overrides[k] = int(v)
+        else:
+            overrides[k] = v
+    opts = ShardingOptions(**overrides)
+    cfg_overrides = {}
+    for kv in args.cfg:
+        k, v = kv.split("=")
+        if v.lstrip("-").isdigit():
+            cfg_overrides[k] = int(v)
+        elif v in ("True", "False", "true", "false"):
+            cfg_overrides[k] = v in ("True", "true")
+        else:
+            cfg_overrides[k] = v
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        for aid in ARCH_IDS:
+            for sname in SHAPES:
+                for m in meshes:
+                    cells.append((aid, sname, m))
+    else:
+        cells = [(args.arch, args.shape, m) for m in meshes]
+
+    for arch, shape_name, m in cells:
+        tag = f"_{args.tag}" if args.tag else ""
+        path = outdir / f"{arch}_{shape_name}_{m}{tag}.json"
+        if path.exists() and not args.force:
+            print(f"[skip] {path.name} exists")
+            continue
+        if not shape_applicable(arch, shape_name):
+            path.write_text(json.dumps({
+                "arch": arch, "shape": shape_name, "mesh": m, "ok": True,
+                "skipped": "full-attention arch: long_500k needs "
+                           "sub-quadratic attention (see DESIGN.md)"}))
+            print(f"[skip-cell] {arch} {shape_name} (full attention)")
+            continue
+        print(f"[lower] {arch} {shape_name} {m} ...", flush=True)
+        t0 = time.time()
+        try:
+            res = lower_cell(arch, shape_name, m == "multi", opts,
+                             args.microbatches, cfg_overrides)
+            path.write_text(json.dumps(res, indent=1))
+            ca = res["cost_analysis"]
+            print(f"[ok] {path.name}: flops/dev={ca.get('flops', 0):.3e} "
+                  f"compile={res['compile_s']}s total={time.time()-t0:.0f}s",
+                  flush=True)
+        except Exception as exc:  # noqa: BLE001 — sweep must survive a cell
+            path.write_text(json.dumps({
+                "arch": arch, "shape": shape_name, "mesh": m, "ok": False,
+                "error": f"{type(exc).__name__}: {exc}",
+                "traceback": traceback.format_exc()[-4000:]}))
+            print(f"[FAIL] {arch} {shape_name} {m}: {exc}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Post-optimization HLO analysis: collective-bytes histogram.
+
+The compiled module is the per-device SPMD program. Operand shapes are not
+printed inline (jax 0.8 HLO dumps ``all-reduce(%arg)``), so bytes are derived
+from each collective's RESULT shape plus its ``replica_groups`` size, with
+the standard ring-algorithm wire factors:
+
+  all-reduce        wire/dev = 2 * R * (s-1)/s        (R = result bytes)
+  all-gather        wire/dev =     R * (s-1)/s        (R = gathered result)
+  reduce-scatter    wire/dev =     R * (s-1)           (R = scattered shard)
+  all-to-all        wire/dev =     R * (s-1)/s
+  collective-permute wire/dev =    R
+
+Async pairs: the ``-start`` op carries shapes + replica_groups (result tuple's
+last element is the output buffer); ``-done`` is skipped.
+
+IMPORTANT: ops inside ``while`` bodies (lax.scan over layer groups) are
+counted ONCE here; the dry-run driver extrapolates trip counts by compiling
+G=1 and G=2 group variants (linear in G). See launch/dryrun.py.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(?P<result>\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<async>-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:  # explicit list form {{0,1,2,...},...}: size of first group
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def _wire_bytes(op: str, result_bytes: int, s: int) -> float:
+    if s <= 1 and op != "collective-permute":
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * result_bytes * (s - 1) / s
+    if op == "all-gather":
+        return float(result_bytes) * (s - 1) / s
+    if op == "reduce-scatter":
+        return float(result_bytes) * (s - 1)
+    if op == "all-to-all":
+        return float(result_bytes) * (s - 1) / s
+    return float(result_bytes)            # collective-permute
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective stats keyed by op kind:
+    result_bytes (raw), wire_bytes (ring model), count."""
+    out = {k: {"bytes": 0, "wire_bytes": 0.0, "count": 0}
+           for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m or m.group("async") == "-done":
+            continue
+        op = m.group("op")
+        shapes = _SHAPE_RE.findall(m.group("result"))
+        if not shapes:
+            continue
+        # async tuple results: last element is the output buffer
+        dtype, dims = shapes[-1]
+        rb = _shape_bytes(dtype, dims)
+        s = _group_size(line)
+        out[op]["bytes"] += rb
+        out[op]["wire_bytes"] += _wire_bytes(op, rb, s)
+        out[op]["count"] += 1
+    return out
+
+
+def op_histogram(hlo_text: str, top: int = 20) -> list:
+    """Crude per-op-kind output-bytes histogram (remat/layout diagnostics)."""
+    sizes = defaultdict(lambda: [0, 0])
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?\S+\s*=\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+([a-z\-]+)",
+                     line)
+        if not m:
+            continue
+        dtype, dims, op = m.groups()
+        sizes[op][0] += _shape_bytes(dtype, dims)
+        sizes[op][1] += 1
+    ranked = sorted(sizes.items(), key=lambda kv: -kv[1][0])[:top]
+    return [{"op": k, "out_bytes": v[0], "count": v[1]} for k, v in ranked]

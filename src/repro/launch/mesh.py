@@ -1,0 +1,42 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state. The dry-run driver forces 512 host devices
+via XLA_FLAGS before any jax import; ``make_production_mesh`` then slices the
+first 256 for the single-pod mesh.
+
+Mesh axes:
+  single-pod : (16, 16)            ("data", "model")   — 256 chips (one v5e pod)
+  multi-pod  : (2, 16, 16)         ("pod", "data", "model") — 512 chips
+The "pod" axis is an outer data-parallel axis crossing DCN; params are
+FSDP-sharded over ("pod", "data") in the multi-pod regime.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devices)}; "
+            "run under launch/dryrun.py which forces 512 host devices")
+    return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many local devices exist (tests)."""
+    n = data * model
+    devices = jax.devices()[:n]
+    return jax.make_mesh((data, model), ("data", "model"), devices=devices)
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel (batch/FSDP) mesh axes for a mesh."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,137 @@
+"""Roofline analysis from dry-run artifacts (TPU v5e target).
+
+Three terms per (arch x shape x mesh), in seconds per step:
+
+  compute    = HLO_FLOPs_per_dev / peak_FLOPs            (197 TFLOP/s bf16)
+  memory     = HLO_bytes_per_dev / HBM_bw                (819 GB/s)
+  collective = wire_bytes_per_dev / ICI_bw               (3 links x 50 GB/s
+                                                          per v5e chip; the
+                                                          ring factors are
+                                                          already in
+                                                          wire_bytes — see
+                                                          launch/hlo.py)
+
+HLO_FLOPs/bytes come from ``compiled.cost_analysis()`` with the documented
+loop-trip extrapolation (launch/dryrun.py); wire bytes from the parsed
+post-optimization HLO. The dominant term is the bottleneck; roofline
+fraction = compute / max(all three) (how close the cell is to being
+MXU-bound at peak).
+
+CPU-lowering caveat (documented in EXPERIMENTS.md): XLA:CPU promotes bf16
+dot/reduce intermediates to f32, so activation-collective and scores bytes
+are ~2x what a TPU lowering would move; the reported terms are therefore
+conservative upper bounds for memory/collective.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 3 * 50e9            # bytes/s / chip (3 links x ~50 GB/s, v5e 2D torus)
+DCN_BW = 25e9                # bytes/s / chip equivalent for the pod axis
+
+
+def analyze_artifact(art: dict) -> dict:
+    ca = art["cost_analysis"]
+    flops = ca.get("flops", 0.0)
+    byts = ca.get("bytes accessed", 0.0)
+    wire = sum(c.get("wire_bytes", 0.0) for c in art["collectives"].values())
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = wire / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    model_flops = art["model_flops"]
+    hlo_flops_global = flops * art["devices"]
+    step_s = bound                     # roofline-ideal step time
+    model_flops_rate = (model_flops / step_s / art["devices"]
+                        if step_s > 0 else 0.0)
+    return {
+        "arch": art["arch"], "shape": art["shape"], "mesh": art["mesh"],
+        "kind": art["kind"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_ratio": (model_flops / hlo_flops_global
+                         if hlo_flops_global else 0.0),
+        "roofline_fraction": compute_s / bound if bound > 0 else 0.0,
+        "mfu_at_roofline": model_flops_rate / PEAK_FLOPS,
+        "hbm_gb_per_dev": (art["memory_analysis"]["argument_size_in_bytes"]
+                           + art["memory_analysis"]["temp_size_in_bytes"]
+                           + art["memory_analysis"]["output_size_in_bytes"])
+                          / 1e9,
+        "wire_gb_per_dev": wire / 1e9,
+        "compile_s": art.get("compile_s"),
+    }
+
+
+def load_all(directory: str, mesh: str | None = None, tag: str = ""):
+    rows = []
+    for path in sorted(Path(directory).glob(f"*{tag}.json")):
+        art = json.loads(path.read_text())
+        if not art.get("ok") or art.get("skipped"):
+            continue
+        if tag and not path.stem.endswith(tag):
+            continue
+        if not tag and ("_opt" in path.stem or "_hc" in path.stem):
+            continue
+        if mesh and art.get("mesh") != mesh:
+            continue
+        rows.append(analyze_artifact(art))
+    return rows
+
+
+def suggestion(row: dict) -> str:
+    if row["dominant"] == "collective":
+        return ("reduce TP activation all-reduces (sequence-parallel "
+                "residual / reduce-scatter+all-gather), or overlap with "
+                "compute (latency-hiding scheduler)")
+    if row["dominant"] == "memory":
+        if row["kind"] == "decode":
+            return ("KV-cache traffic bound: quantize KV to int8/fp8 or "
+                    "shrink per-step working set (flash-decoding already on)")
+        return ("activation traffic bound: fuse attention (Pallas flash), "
+                "microbatch to shrink live set, bf16 scores")
+    return "MXU-bound: increase per-chip batch or reduce remat recompute"
+
+
+def format_table(rows) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':6s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'collect_s':>10s} "
+           f"{'bound':>10s} {'roofline%':>9s} {'useful%':>8s} {'HBM_GB':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:6s} "
+            f"{r['compute_s']:10.3e} {r['memory_s']:10.3e} "
+            f"{r['collective_s']:10.3e} {r['dominant']:>10s} "
+            f"{100 * r['roofline_fraction']:8.1f}% "
+            f"{100 * r['useful_ratio']:7.1f}% {r['hbm_gb_per_dev']:7.1f}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    rows = load_all(args.dir, args.mesh, args.tag)
+    print(format_table(rows))
+    print("\nper-cell bottleneck guidance:")
+    for r in rows:
+        print(f"  {r['arch']:>24s}/{r['shape']:<12s}: [{r['dominant']}] "
+              f"{suggestion(r)}")
+    if args.json_out:
+        Path(args.json_out).write_text(json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

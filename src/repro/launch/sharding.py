@@ -1,0 +1,224 @@
+"""Sharding rules: logical tensor axes -> mesh axes.
+
+Baseline scheme (the paper-faithful framework default; hillclimbed variants
+live behind ``ShardingOptions`` flags and are recorded in EXPERIMENTS.md):
+
+  params   : 2-D sharded — "wide" dim (vocab / d_ff / heads*head_dim /
+             d_inner / expert-ff) over "model" (TP), d_model over the
+             data-parallel axes (FSDP / ZeRO-3). Scan-stacked leading
+             ``groups`` axis is never sharded.
+  batch    : over dp axes; sequence unsharded.
+  logits   : (B, S, V) over (dp, None, "model").
+  KV cache : batch over dp when batch >= |dp|, else cache sequence over
+             "data" (sequence-parallel decode for long_500k/batch-1).
+  SSM state: heads over "model"; P(headdim) over "data" for batch-1.
+
+GSPMD handles non-divisible dims by padding (e.g. 40 q-heads on 16-way TP,
+49155-vocab); the roofline report quantifies that waste via the
+MODEL_FLOPS / HLO_FLOPS ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingOptions:
+    """Hillclimb levers (defaults = baseline)."""
+    seq_shard_prefill: bool = False     # shard sequence over 'data' in prefill
+    fsdp_params: bool = True            # d_model dim of params over dp
+    shard_cache_seq_threshold: int = 16 # batch < threshold -> shard cache seq
+    expert_parallel: bool = False       # experts over 'model' instead of ff
+    decode_cache_shard: str = "seq"     # seq (split-KV) | headdim (clean DUS
+                                        # + per-layer scores all-reduce)
+
+
+def _dp(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def param_specs(cfg: ModelConfig, mesh, opts: ShardingOptions = ShardingOptions()):
+    """PartitionSpec pytree matching ``init_params`` structure. Every group
+    param gets a leading None for the scan-stacked ``groups`` axis."""
+    dp = P(*_dp(mesh)) if opts.fsdp_params else None
+    dpa = _dp(mesh) if opts.fsdp_params else None
+
+    def g(*spec):  # group param: leading groups axis
+        return P(None, *spec)
+
+    attn = {
+        "wq": g(dpa, "model"),
+        "wk": g(dpa, "model"),
+        "wv": g(dpa, "model"),
+        "wo": g("model", dpa),
+    }
+    if cfg.qkv_bias:
+        attn.update({"bq": g("model"), "bk": g("model"),
+                     "bv": g("model")})
+    if cfg.qk_norm:
+        attn.update({"q_norm": {"scale": g(None)},
+                     "k_norm": {"scale": g(None)}})
+
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        mlp = {"wi_gate": g(dpa, "model"), "wi_up": g(dpa, "model"),
+               "wo": g("model", dpa)}
+    else:
+        mlp = {"wi": g(dpa, "model"), "wo": g("model", dpa)}
+
+    if opts.expert_parallel:
+        moe = {"router": g(dpa, None),
+               "wi_gate": g("model", dpa, None), "wi_up": g("model", dpa, None),
+               "wi": g("model", dpa, None), "wo": g("model", None, dpa)}
+    else:
+        moe = {"router": g(dpa, None),
+               "wi_gate": g(None, dpa, "model"), "wi_up": g(None, dpa, "model"),
+               "wi": g(None, dpa, "model"), "wo": g(None, "model", dpa)}
+    if cfg.mlp_type not in ("swiglu", "geglu"):
+        moe.pop("wi_gate"), moe.pop("wi_up")
+    else:
+        moe.pop("wi")
+
+    mamba = {
+        "in_proj": g(dpa, "model"),
+        "conv_w": g(None, "model"),
+        "conv_b": g("model"),
+        "A_log": g(None), "D": g(None), "dt_bias": g(None),
+        "out_proj": g("model", dpa),
+    }
+
+    groups = {}
+    for slot, (mixer, mlp_kind) in enumerate(cfg.block_pattern):
+        blk = {"norm_mixer": {"scale": g(None)}}
+        blk["attn" if mixer == "attn" else "mamba"] = (
+            dict(attn) if mixer == "attn" else dict(mamba))
+        if mlp_kind != "none":
+            blk["norm_mlp"] = {"scale": g(None)}
+            if mlp_kind == "dense":
+                blk["mlp"] = dict(mlp)
+            else:
+                blk["moe"] = dict(moe)
+        groups[str(slot)] = blk
+
+    specs = {
+        "embed": P("model", dpa),
+        "final_norm": {"scale": P(None)},
+        "groups": groups,
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P(dpa, "model")
+    del dp
+    return specs
+
+
+def batch_specs(cfg: ModelConfig, mesh, kind: str,
+                opts: ShardingOptions = ShardingOptions()):
+    """Specs for the input batch pytree of each step kind."""
+    dpa = _dp(mesh)
+    # optional sequence sharding over 'model' (hillclimb lever for prefill)
+    seq_axis = "model" if (opts.seq_shard_prefill and kind == "prefill") else None
+    tok = P(dpa, seq_axis)   # (B, S)
+    if kind in ("train", "prefill"):
+        specs = {"tokens": tok, "labels": tok}
+        if cfg.rope_type == "mrope":
+            specs["positions"] = P(None, dpa, None)
+        if cfg.frontend != "none":
+            specs["extra_embeds"] = P(dpa, None, None)
+            specs["extra_mask"] = P(dpa, None)
+        if kind == "prefill":
+            specs.pop("labels")
+        return specs
+    raise ValueError(kind)
+
+
+def cache_specs(cfg: ModelConfig, mesh, batch: int,
+                opts: ShardingOptions = ShardingOptions()):
+    """Decode-cache specs (leading groups axis).
+
+    Attention KV caches are *sequence-sharded* over "model" (split-KV /
+    flash-decoding style: each chip holds a contiguous KV chunk, attends
+    locally, and GSPMD reduces the softmax statistics) — KV-head counts (8, 1)
+    do not divide a 16-way axis, but 32k/500k sequences always do. For
+    batch-1 long-context decode the sequence additionally shards over "data"
+    (and "pod"), spreading the cache across the whole mesh.
+    """
+    dpa = _dp(mesh)
+    big_batch = batch >= opts.shard_cache_seq_threshold
+    all_axes = tuple(a for a in mesh.axis_names)       # seq axes for batch=1
+    cache = {}
+    for slot, (mixer, _) in enumerate(cfg.block_pattern):
+        if mixer == "attn":
+            if big_batch:      # (G, B, S, KV, hd): batch over dp, seq split-KV
+                if opts.decode_cache_shard == "headdim":
+                    kv = P(None, dpa, None, None, "model")
+                else:
+                    kv = P(None, dpa, "model", None, None)
+            else:              # batch-1: seq over the entire mesh
+                kv = P(None, None, all_axes, None, None)
+            cache[str(slot)] = {"k": kv, "v": kv}
+        elif mixer == "mamba":
+            if big_batch:      # conv (G,B,k-1,C), ssm (G,B,H,P,N)
+                cache[str(slot)] = {
+                    "conv": P(None, dpa, None, "model"),
+                    "ssm": P(None, dpa, "model", None, None),
+                }
+            else:              # batch-1: shard heads over model, headdim over data
+                cache[str(slot)] = {
+                    "conv": P(None, None, None, "model"),
+                    "ssm": P(None, None, "model", "data", None),
+                }
+    return cache
+
+
+def token_specs(mesh, batch: int, opts: ShardingOptions = ShardingOptions()):
+    dpa = _dp(mesh)
+    return P(dpa) if batch >= opts.shard_cache_seq_threshold else P(None)
+
+
+def opt_state_specs(param_spec_tree):
+    """AdamW moments share the param specs; step counter replicated."""
+    return {"mu": param_spec_tree, "nu": param_spec_tree, "step": P()}
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_specs(spec_tree, abstract_tree, mesh):
+    """Safety net: drop any spec axis whose size does not divide the dim
+    (jax rejects uneven shardings at the jit boundary). For tuple axes the
+    longest divisible suffix-trimmed prefix is kept."""
+    def fix(spec, abs_leaf):
+        if not isinstance(spec, P):
+            return spec
+        dims = abs_leaf.shape
+        new = []
+        for d_idx, axes in enumerate(spec):
+            if axes is None or d_idx >= len(dims):
+                new.append(None if d_idx >= len(dims) else axes)
+                continue
+            cand = (axes,) if isinstance(axes, str) else tuple(axes)
+            while cand and dims[d_idx] % _axis_size(mesh, cand) != 0:
+                cand = cand[:-1]
+            new.append(cand if cand else None)
+        return P(*new[:len(dims)])
+
+    return jax.tree.map(fix, spec_tree, abstract_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,48 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) cell — the
+weak-type-correct, shardable, no-allocation stand-ins the dry-run lowers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec
+from repro.models import abstract_caches
+from repro.models.config import ModelConfig
+from repro.models.common import dtype_of
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_sds(cfg: ModelConfig, batch: int, seq: int, kind: str) -> dict:
+    specs = {"tokens": SDS((batch, seq), jnp.int32)}
+    if kind == "train":
+        specs["labels"] = SDS((batch, seq), jnp.int32)
+    if cfg.rope_type == "mrope":
+        specs["positions"] = SDS((3, batch, seq), jnp.int32)
+    if cfg.frontend != "none":
+        specs["extra_embeds"] = SDS((batch, seq, cfg.d_model),
+                                    dtype_of(cfg.dtype))
+        specs["extra_mask"] = SDS((batch, seq), jnp.bool_)
+    return specs
+
+
+def decode_sds(cfg: ModelConfig, batch: int, max_len: int):
+    caches = abstract_caches(cfg, batch, max_len)
+    token = SDS((batch,), jnp.int32)
+    pos = SDS((), jnp.int32)
+    return caches, token, pos
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """All abstract inputs for the cell's step function (excl. params/state)."""
+    if shape.kind == "train":
+        return {"batch": batch_sds(cfg, shape.global_batch, shape.seq_len,
+                                   "train")}
+    if shape.kind == "prefill":
+        return {"batch": batch_sds(cfg, shape.global_batch, shape.seq_len,
+                                   "prefill")}
+    if shape.kind == "decode":
+        caches, token, pos = decode_sds(cfg, shape.global_batch, shape.seq_len)
+        return {"caches": caches, "token": token, "pos": pos}
+    raise ValueError(shape.kind)

@@ -1,0 +1,58 @@
+"""Production training launcher.
+
+On a real multi-pod deployment this process runs per host with
+``jax.distributed.initialize`` and the production mesh; on this CPU
+container it runs the same code path end-to-end at smoke scale
+(``--smoke``), which is what examples/quickstart.py drives.
+
+Usage:
+    python -m repro.launch.train --arch qwen3_1_7b --smoke --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.data import DataConfig
+from repro.train import OptimizerConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_1_7b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config sized for CPU")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt_train")
+    args = ap.parse_args()
+
+    cfg = (get_smoke_config(args.arch) if args.smoke
+           else get_config(args.arch))
+    oc = OptimizerConfig(peak_lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                         decay_steps=args.steps,
+                         state_dtype=cfg.opt_state_dtype)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                    global_batch=args.global_batch)
+    tc = TrainerConfig(total_steps=args.steps,
+                       ckpt_every=max(args.steps // 4, 1),
+                       log_every=max(args.steps // 20, 1),
+                       ckpt_dir=args.ckpt_dir,
+                       microbatches=args.microbatches)
+    print(f"devices: {jax.devices()}")
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M")
+    trainer = Trainer(cfg, oc, tc, dc)
+    start = trainer.init_or_restore()
+    print(f"starting at step {start}")
+    out = trainer.run()
+    print(f"done: final loss {out['losses'][-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

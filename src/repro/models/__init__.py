@@ -1,0 +1,11 @@
+"""Pure-JAX model zoo covering the 10 assigned architectures."""
+from .config import ModelConfig, jamba_pattern
+from .model import (abstract_caches, abstract_params, forward_decode,
+                    forward_prefill, forward_train, init_caches, init_params,
+                    softmax_xent)
+
+__all__ = [
+    "ModelConfig", "jamba_pattern", "init_params", "abstract_params",
+    "forward_train", "forward_prefill", "forward_decode", "init_caches",
+    "abstract_caches", "softmax_xent",
+]

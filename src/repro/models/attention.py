@@ -1,0 +1,320 @@
+"""Grouped-query attention with optional QKV bias, qk-norm, sliding window,
+M-RoPE, and a decode path over a preallocated KV cache.
+
+Pure-jnp reference path (what the dry-run lowers); the Pallas flash kernels in
+``repro.kernels`` are the TPU production implementations of `_attend_train`
+and `_attend_decode` (see kernels/*/ops.py for the switch).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import (apply_mrope, apply_rope, constrain, dense_init,
+                     init_rmsnorm, rmsnorm)
+from .config import ModelConfig
+
+NEG_INF = -1e30
+
+
+def init_attention(cfg: ModelConfig, key, dtype) -> dict:
+    """Projections stored FLATTENED — (d_model, H*hd) — so tensor-parallel
+    sharding divides evenly for every assigned arch (40 heads / 8 kv-heads do
+    not divide a 16-way axis, but H*hd always does)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, (cfg.d_model, cfg.q_dim), dtype),
+        "wk": dense_init(k2, (cfg.d_model, cfg.kv_dim), dtype),
+        "wv": dense_init(k3, (cfg.d_model, cfg.kv_dim), dtype),
+        "wo": dense_init(k4, (cfg.q_dim, cfg.d_model), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(cfg.head_dim, dtype)
+        p["k_norm"] = init_rmsnorm(cfg.head_dim, dtype)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p, x, positions):
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    k = jnp.einsum("bsd,de->bse", x, p["wk"])
+    v = jnp.einsum("bsd,de->bse", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = constrain(q, cfg, "dp", None, "tp")
+    k = constrain(k, cfg, "dp", None, "tp")
+    v = constrain(v, cfg, "dp", None, "tp")
+    q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if cfg.rope_type == "rope":
+        pos2d = positions if positions.ndim == 2 else positions[0]
+        q = apply_rope(q, pos2d, cfg.rope_theta)
+        k = apply_rope(k, pos2d, cfg.rope_theta)
+    elif cfg.rope_type == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k, v
+
+
+def _attend(cfg: ModelConfig, q, k, v, q_offset, kv_len_mask=None):
+    """Causal (optionally sliding-window) GQA attention.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D). q position i attends kv
+    position j iff j <= i + q_offset (and within the sliding window).
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    if k.dtype != q.dtype:          # quantized KV cache: dequant on read
+        k = k.astype(q.dtype)
+        v = v.astype(q.dtype)
+    qg = q.reshape(b, sq, hkv, rep, d)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32)).astype(q.dtype)
+    scores = jnp.einsum("bqhrd,bkhd->bhrqk", qg * scale, k)
+    scores = scores.astype(jnp.float32)
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    mask = kpos <= qpos
+    if cfg.sliding_window:
+        mask &= kpos > qpos - cfg.sliding_window
+    if kv_len_mask is not None:                       # (B, Skv) valid slots
+        mask = mask[None] & kv_len_mask[:, None, :]
+        scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    else:
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs, v)
+    return out.reshape(b, sq, hq, d)
+
+
+def _attend_flash(cfg: ModelConfig, q, k, v, q_offset):
+    """Online-softmax attention, lax.scan over KV blocks (the pure-jnp twin
+    of kernels/flash_attention). Peak memory is O(S * block) instead of
+    O(S^2).
+
+    NOTE for the dry-run roofline: XLA's HloCostAnalysis counts the scanned
+    KV loop body ONCE, so cells lowered through this path under-report
+    attention FLOPs by a factor of n_blocks; launch/dryrun.py adds the
+    analytic correction (documented there).
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    blk = cfg.attn_flash_block
+    nb = skv // blk
+    assert skv % blk == 0, (skv, blk)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32)).astype(q.dtype)
+    qg = (q * scale).reshape(b, sq, hkv, rep, d)
+    kb = jnp.moveaxis(k.reshape(b, nb, blk, hkv, d), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nb, blk, hkv, d), 1, 0)
+    qpos = jnp.arange(sq)[:, None] + q_offset
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_i, v_i, idx = xs
+        s_blk = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k_i).astype(jnp.float32)
+        kpos = idx * blk + jnp.arange(blk)[None, :]
+        mask = kpos <= qpos                       # (sq, blk)
+        if cfg.sliding_window:
+            mask &= kpos > qpos - cfg.sliding_window
+        s_blk = jnp.where(mask[None, None, None], s_blk, NEG_INF)
+        m_new = jnp.maximum(m, s_blk.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p_blk = jnp.exp(s_blk - m_new[..., None])
+        l_new = l * corr + p_blk.sum(axis=-1)
+        pv = jnp.einsum("bhrqk,bkhd->bhrqd", p_blk.astype(q.dtype), v_i)
+        acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, rep, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, rep, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, rep, sq, d), q.dtype)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kb, vb, jnp.arange(nb)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, hq, d)
+    return out
+
+
+def _flash_fwd_scan(block, window, q, k, v):
+    """Forward online-softmax over KV blocks. q (B,S,Hq,D); k/v (B,S,Hkv,D).
+    Returns (out (B,S,Hq,D), lse (B,Hkv,rep,S))."""
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    nb = skv // block
+    scale = 1.0 / (d ** 0.5)
+    qg = (q.astype(jnp.float32) * scale).reshape(b, sq, hkv, rep, d)
+    kb = jnp.moveaxis(k.reshape(b, nb, block, hkv, d), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nb, block, hkv, d), 1, 0)
+    qpos = jnp.arange(sq)[:, None]
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_i, v_i, idx = xs
+        s_blk = jnp.einsum("bqhrd,bkhd->bhrqk", qg,
+                           k_i.astype(jnp.float32))
+        kpos = idx * block + jnp.arange(block)[None, :]
+        mask = kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s_blk = jnp.where(mask[None, None, None], s_blk, NEG_INF)
+        m_new = jnp.maximum(m, s_blk.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p_blk = jnp.exp(s_blk - m_new[..., None])
+        l_new = l * corr + p_blk.sum(axis=-1)
+        pv = jnp.einsum("bhrqk,bkhd->bhrqd", p_blk,
+                        v_i.astype(jnp.float32))
+        return (m_new, l_new, acc * corr[..., None] + pv), None
+
+    m0 = jnp.full((b, hkv, rep, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, rep, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, rep, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kb, vb, jnp.arange(nb)))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, hq, d).astype(q.dtype)
+    return out, lse
+
+
+import functools as _ft
+
+
+@_ft.lru_cache(maxsize=32)
+def _make_flash_train(block: int, window: int):
+    """FlashAttention-2 with recompute-based custom backward, pure jnp —
+    the algorithm of kernels/flash_attention, usable under autodiff with
+    O(S * block) live memory instead of O(S^2) (hillclimb iterations A1/B3)."""
+
+    @jax.custom_vjp
+    def f(q, k, v):
+        return _flash_fwd_scan(block, window, q, k, v)[0]
+
+    def fwd(q, k, v):
+        out, lse = _flash_fwd_scan(block, window, q, k, v)
+        return out, (q, k, v, out, lse)
+
+    def bwd(res, do):
+        q, k, v, out, lse = res
+        b, sq, hq, d = q.shape
+        skv, hkv = k.shape[1], k.shape[2]
+        rep = hq // hkv
+        nb = skv // block
+        scale = 1.0 / (d ** 0.5)
+        qg = (q.astype(jnp.float32) * scale).reshape(b, sq, hkv, rep, d)
+        dog = do.astype(jnp.float32).reshape(b, sq, hkv, rep, d)
+        dog = jnp.moveaxis(dog, 1, 3)                      # (B,Hkv,rep,S,D)
+        delta = jnp.sum(dog * jnp.moveaxis(
+            out.astype(jnp.float32).reshape(b, sq, hkv, rep, d), 1, 3),
+            axis=-1)                                       # (B,Hkv,rep,S)
+        kb = jnp.moveaxis(k.reshape(b, nb, block, hkv, d), 1, 0)
+        vb = jnp.moveaxis(v.reshape(b, nb, block, hkv, d), 1, 0)
+        qpos = jnp.arange(sq)[:, None]
+
+        def body(dq_acc, xs):
+            k_i, v_i, idx = xs
+            s_blk = jnp.einsum("bqhrd,bkhd->bhrqk", qg,
+                               k_i.astype(jnp.float32))
+            kpos = idx * block + jnp.arange(block)[None, :]
+            mask = kpos <= qpos
+            if window:
+                mask &= kpos > qpos - window
+            s_blk = jnp.where(mask[None, None, None], s_blk, NEG_INF)
+            p_blk = jnp.exp(s_blk - lse[..., None])        # (B,Hkv,rep,S,bk)
+            dv_i = jnp.einsum("bhrqk,bhrqd->bkhd", p_blk, dog)
+            dp = jnp.einsum("bhrqd,bkhd->bhrqk", dog,
+                            v_i.astype(jnp.float32))
+            ds = p_blk * (dp - delta[..., None])
+            dq_acc = dq_acc + jnp.einsum("bhrqk,bkhd->bqhrd", ds,
+                                         k_i.astype(jnp.float32))
+            dk_i = jnp.einsum("bhrqk,bqhrd->bkhd", ds,
+                              jnp.moveaxis(qg, (2, 3), (2, 3)))
+            return dq_acc, (dk_i, dv_i)
+
+        dq0 = jnp.zeros((b, sq, hkv, rep, d), jnp.float32)
+        dq, (dks, dvs) = jax.lax.scan(body, dq0,
+                                      (kb, vb, jnp.arange(nb)))
+        dq = (dq * scale).reshape(b, sq, hq, d).astype(q.dtype)
+        dk = jnp.moveaxis(dks, 0, 1).reshape(b, skv, hkv, d).astype(k.dtype)
+        dv = jnp.moveaxis(dvs, 0, 1).reshape(b, skv, hkv, d).astype(v.dtype)
+        return dq, dk, dv
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def _attend_any(cfg: ModelConfig, q, k, v, q_offset, kv_len_mask=None):
+    if (cfg.attn_flash_block and kv_len_mask is None
+            and k.shape[1] % cfg.attn_flash_block == 0
+            and k.shape[1] > cfg.attn_flash_block):
+        fn = _make_flash_train(cfg.attn_flash_block, cfg.sliding_window)
+        return fn(q, k, v)
+    return _attend(cfg, q, k, v, q_offset, kv_len_mask)
+
+
+def attention_train(cfg: ModelConfig, p, x, positions):
+    """Full-sequence causal attention (training / prefill). x: (B, S, D)."""
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    out = _attend_any(cfg, q, k, v, q_offset=0)
+    return jnp.einsum("bse,ed->bsd",
+                      out.reshape(out.shape[0], out.shape[1], -1), p["wo"])
+
+
+def attention_prefill(cfg: ModelConfig, p, x, positions):
+    """Like train, but also returns the KV cache (cast to compute dtype)."""
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    out = _attend_any(cfg, q, k, v, q_offset=0)
+    y = jnp.einsum("bse,ed->bsd",
+                   out.reshape(out.shape[0], out.shape[1], -1), p["wo"])
+    return y, {"k": k, "v": v}
+
+
+def attention_decode(cfg: ModelConfig, p, x, cache: dict, pos):
+    """One-token decode. x: (B, 1, D); cache k/v: (B, S_max, Hkv, D);
+    pos: () or (B,) int32 — per-sequence write index (continuous batching
+    admits requests at different offsets)."""
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (x.shape[0],))
+    positions = pos_b[:, None]
+    if cfg.rope_type == "mrope":
+        positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions)
+    if cfg.decode_cache_update == "select":
+        # Masked-select write: elementwise on the (sequence-sharded) cache
+        # with the new KV replicated — no GSPMD resharding of the cache
+        # (the naive dynamic_update_slice triggers involuntary full
+        # rematerialization of cache-sized tensors; see EXPERIMENTS.md §Perf).
+        sel = (jnp.arange(cache["k"].shape[1])[None, :]
+               == pos_b[:, None])[:, :, None, None]
+        k = jnp.where(sel, k_new.astype(cache["k"].dtype), cache["k"])
+        v = jnp.where(sel, v_new.astype(cache["v"].dtype), cache["v"])
+    elif cfg.decode_cache_update == "dus_constrained":
+        # DUS with the result pinned to the cache's (batch, seq-sharded)
+        # layout, so the update's TP sharding does not propagate into the
+        # cache and force a reshard (hillclimb iteration C3).
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0, 0))
+        k = constrain(k, cfg, "dp", "tp", None, None)
+        v = constrain(v, cfg, "dp", "tp", None, None)
+    else:
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0, 0))
+    valid = jnp.arange(k.shape[1])[None, :] <= pos_b[:, None]
+    out = _attend(cfg, q, k, v, q_offset=pos_b.max(), kv_len_mask=valid)
+    y = jnp.einsum("bse,ed->bsd",
+                   out.reshape(out.shape[0], out.shape[1], -1), p["wo"])
+    return y, {"k": k, "v": v}

@@ -1,0 +1,218 @@
+"""Decoder blocks and the scan-grouped layer stack.
+
+A *group* is one instance of ``cfg.block_pattern``; the model stacks
+``cfg.groups`` copies of it with parameters stacked on a leading axis and a
+single ``lax.scan`` over groups — HLO size is O(pattern), not O(layers),
+which keeps the 512-device dry-run compile tractable and is how production
+JAX LM stacks (MaxText et al.) are written.
+
+Caches mirror the stacking: each pattern slot that needs state owns an entry
+keyed by its slot index, with a leading ``groups`` axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attention_decode, attention_prefill, attention_train,
+                        init_attention)
+from .common import constrain, init_rmsnorm, rmsnorm
+from .config import ModelConfig
+from .mlp import init_mlp, mlp_apply
+from .moe import init_moe, moe_apply
+from .ssm import init_mamba, mamba_decode, mamba_train
+
+
+def init_group(cfg: ModelConfig, key, dtype) -> dict:
+    """Params for one group (one copy of the block pattern)."""
+    params = {}
+    keys = jax.random.split(key, 2 * len(cfg.block_pattern))
+    for slot, (mixer, mlp) in enumerate(cfg.block_pattern):
+        kmix, kmlp = keys[2 * slot], keys[2 * slot + 1]
+        blk = {"norm_mixer": init_rmsnorm(cfg.d_model, dtype)}
+        if mixer == "attn":
+            blk["attn"] = init_attention(cfg, kmix, dtype)
+        elif mixer == "mamba":
+            blk["mamba"] = init_mamba(cfg, kmix, dtype)
+        else:
+            raise ValueError(mixer)
+        if mlp != "none":
+            blk["norm_mlp"] = init_rmsnorm(cfg.d_model, dtype)
+            if mlp == "dense":
+                blk["mlp"] = init_mlp(cfg, kmlp, dtype)
+            elif mlp == "moe":
+                blk["moe"] = init_moe(cfg, kmlp, dtype)
+            else:
+                raise ValueError(mlp)
+        params[str(slot)] = blk
+    return params
+
+
+def init_group_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    """Decode cache for one group (leading ``groups`` axis added by caller)."""
+    kv_dtype = (dtype if not cfg.cache_dtype
+                else __import__("repro.models.common", fromlist=["dtype_of"])
+                .dtype_of(cfg.cache_dtype))
+    cache = {}
+    for slot, (mixer, _) in enumerate(cfg.block_pattern):
+        if mixer == "attn":
+            shp = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+            cache[str(slot)] = {"k": jnp.zeros(shp, kv_dtype),
+                                "v": jnp.zeros(shp, kv_dtype)}
+        elif mixer == "mamba":
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+            cache[str(slot)] = {
+                "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+                "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim,
+                                  cfg.ssm_state), jnp.float32),
+            }
+    return cache
+
+
+def _group_train(cfg: ModelConfig, gparams, h, positions):
+    """One group forward (train). Returns (h, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    for slot, (mixer, mlp) in enumerate(cfg.block_pattern):
+        blk = gparams[str(slot)]
+        h = constrain(h, cfg, "dp", None, None)
+        hn = rmsnorm(blk["norm_mixer"], h, cfg.norm_eps)
+        if mixer == "attn":
+            h = h + attention_train(cfg, blk["attn"], hn, positions)
+        else:
+            h = h + mamba_train(cfg, blk["mamba"], hn)
+        if mlp != "none":
+            hn = rmsnorm(blk["norm_mlp"], h, cfg.norm_eps)
+            if mlp == "dense":
+                h = h + mlp_apply(cfg, blk["mlp"], hn)
+            else:
+                y, a = moe_apply(cfg, blk["moe"], hn)
+                h = h + y
+                aux = aux + a
+    return h, aux
+
+
+def _group_prefill(cfg: ModelConfig, gparams, h, positions):
+    """One group forward (prefill): also emits this group's cache."""
+    cache = {}
+    aux = jnp.zeros((), jnp.float32)
+    for slot, (mixer, mlp) in enumerate(cfg.block_pattern):
+        blk = gparams[str(slot)]
+        h = constrain(h, cfg, "dp", None, None)
+        hn = rmsnorm(blk["norm_mixer"], h, cfg.norm_eps)
+        if mixer == "attn":
+            y, kv = attention_prefill(cfg, blk["attn"], hn, positions)
+            h = h + y
+            cache[str(slot)] = kv
+        else:
+            y, st = mamba_train(cfg, blk["mamba"], hn, return_state=True)
+            h = h + y
+            cache[str(slot)] = st
+        if mlp != "none":
+            hn = rmsnorm(blk["norm_mlp"], h, cfg.norm_eps)
+            if mlp == "dense":
+                h = h + mlp_apply(cfg, blk["mlp"], hn)
+            else:
+                y, a = moe_apply(cfg, blk["moe"], hn)
+                h = h + y
+                aux = aux + a
+    return h, cache, aux
+
+
+def _group_decode(cfg: ModelConfig, gparams, h, cache, pos):
+    """One-token step through one group; returns (h, new_cache)."""
+    new_cache = {}
+    for slot, (mixer, mlp) in enumerate(cfg.block_pattern):
+        blk = gparams[str(slot)]
+        h = constrain(h, cfg, "dp", None, None)
+        hn = rmsnorm(blk["norm_mixer"], h, cfg.norm_eps)
+        if mixer == "attn":
+            y, kv = attention_decode(cfg, blk["attn"], hn, cache[str(slot)], pos)
+            h = h + y
+            new_cache[str(slot)] = kv
+        else:
+            y, st = mamba_decode(cfg, blk["mamba"], hn, cache[str(slot)])
+            h = h + y
+            new_cache[str(slot)] = st
+        if mlp != "none":
+            hn = rmsnorm(blk["norm_mlp"], h, cfg.norm_eps)
+            if mlp == "dense":
+                h = h + mlp_apply(cfg, blk["mlp"], hn)
+            else:
+                y, _ = moe_apply(cfg, blk["moe"], hn)
+                h = h + y
+    return h, new_cache
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if cfg.remat == "dots" else None)
+    return jax.checkpoint(fn, policy=policy, prevent_cse=False)
+
+
+def stack_train(cfg: ModelConfig, stacked_gparams, h, positions):
+    """Scan the group stack. stacked_gparams: leading ``groups`` axis."""
+    fn = _remat(cfg, functools.partial(_group_train, cfg))
+
+    if not cfg.scan_groups:
+        aux = jnp.zeros((), jnp.float32)
+        for gi in range(cfg.groups):
+            gp = jax.tree.map(lambda a: a[gi], stacked_gparams)
+            h, a = fn(gp, h, positions)
+            aux = aux + a
+        return h, aux
+
+    def body(carry, gp):
+        h, aux = carry
+        h, a = fn(gp, h, positions)
+        return (h, aux + a), None
+
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                               stacked_gparams)
+    return h, aux
+
+
+def stack_prefill(cfg: ModelConfig, stacked_gparams, h, positions):
+    fn = _remat(cfg, functools.partial(_group_prefill, cfg))
+
+    if not cfg.scan_groups:
+        caches, auxes = [], []
+        for gi in range(cfg.groups):
+            gp = jax.tree.map(lambda a: a[gi], stacked_gparams)
+            h, cache, aux = fn(gp, h, positions)
+            caches.append(cache)
+            auxes.append(aux)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+        return h, stacked, sum(auxes)
+
+    def body(carry, gp):
+        h = carry
+        h, cache, aux = fn(gp, h, positions)
+        return h, (cache, aux)
+
+    h, (caches, aux) = jax.lax.scan(body, h, stacked_gparams)
+    return h, caches, aux.sum()
+
+
+def stack_decode(cfg: ModelConfig, stacked_gparams, h, caches, pos):
+    if not cfg.scan_groups:
+        new_caches = []
+        for gi in range(cfg.groups):
+            gp = jax.tree.map(lambda a: a[gi], stacked_gparams)
+            cache = jax.tree.map(lambda a: a[gi], caches)
+            h, nc = _group_decode(cfg, gp, h, cache, pos)
+            new_caches.append(nc)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+        return h, stacked
+
+    def body(carry, xs):
+        h = carry
+        gp, cache = xs
+        h, new_cache = _group_decode(cfg, gp, h, cache, pos)
+        return h, new_cache
+
+    h, new_caches = jax.lax.scan(body, h, (stacked_gparams, caches))
+    return h, new_caches

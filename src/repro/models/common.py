@@ -1,0 +1,119 @@
+"""Shared layers: norms, activations, RoPE/M-RoPE, initializers.
+
+Everything is functional: ``init_*`` builds a param pytree, ``apply``-style
+functions are pure. Compute follows a simple mixed-precision policy: params
+are stored in ``cfg.param_dtype``, matmuls run in the params' dtype,
+reductions (norms, softmax) run in float32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+
+def constrain(x, cfg, *dims):
+    """with_sharding_constraint via logical dims: 'dp', 'tp', or None.
+
+    No-op unless the launcher set cfg.dp_axes/tp_axis (so model code runs
+    unchanged on single-device tests). Must execute under a mesh context.
+    """
+    if not cfg.dp_axes and not cfg.tp_axis:
+        return x
+    spec = []
+    for d in dims:
+        if d == "dp":
+            spec.append(tuple(cfg.dp_axes) if cfg.dp_axes else None)
+        elif d == "tp":
+            spec.append(cfg.tp_axis or None)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, PartitionSpec(*spec))
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16,
+            "float8_e4m3fn": jnp.float8_e4m3fn,
+            "float8_e5m2": jnp.float8_e5m2}[name]
+
+
+# -- initializers -----------------------------------------------------------
+
+def dense_init(key, shape, dtype, in_axis: int = 0):
+    fan_in = shape[in_axis]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype, std: float | None = None):
+    if std is None:
+        std = 1.0 / np.sqrt(shape[-1])      # keeps tied/untied logits O(1)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+# -- norms --------------------------------------------------------------------
+
+def init_rmsnorm(dim: int, dtype) -> dict:
+    return {"scale": jnp.zeros((dim,), dtype=dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+# -- activations ---------------------------------------------------------------
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+            "swiglu": jax.nn.silu, "geglu": lambda x: jax.nn.gelu(x, approximate=True),
+            }[name]
+
+
+# -- RoPE ----------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                      # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections) -> jnp.ndarray:
+    """Multimodal RoPE (Qwen2-VL, arXiv:2409.12191).
+
+    positions: (3, B, S) — temporal/height/width position ids. The half-dim
+    frequency axis is split into ``sections`` (summing to D/2); each section
+    rotates by its own positional component. With t == h == w (text-only) this
+    reduces exactly to standard RoPE.
+    """
+    d_half = x.shape[-1] // 2
+    assert sum(sections) == d_half, (sections, d_half)
+    freqs = rope_freqs(x.shape[-1], theta)                      # (D/2,)
+    # one-hot section selector per frequency slot: (3, D/2)
+    sec_id = np.repeat(np.arange(len(sections)), np.asarray(sections))
+    select = jnp.asarray(np.eye(len(sections))[sec_id].T, dtype=jnp.float32)
+    # angles per component: (3, B, S, D/2), then pick the component per slot
+    angles_all = positions[..., None].astype(jnp.float32) * freqs
+    angles = jnp.einsum("cbsd,cd->bsd", angles_all, select)      # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,34 @@
+"""Dense MLPs: SwiGLU / GeGLU (gated) and plain GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import act_fn, constrain, dense_init
+from .config import ModelConfig
+
+
+def init_mlp(cfg: ModelConfig, key, dtype, d_ff: int | None = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            "wi_gate": dense_init(k1, (cfg.d_model, d_ff), dtype),
+            "wi_up": dense_init(k2, (cfg.d_model, d_ff), dtype),
+            "wo": dense_init(k3, (d_ff, cfg.d_model), dtype),
+        }
+    return {
+        "wi": dense_init(k1, (cfg.d_model, d_ff), dtype),
+        "wo": dense_init(k3, (d_ff, cfg.d_model), dtype),
+    }
+
+
+def mlp_apply(cfg: ModelConfig, p, x):
+    act = act_fn(cfg.mlp_type)
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        h = act(jnp.einsum("bsd,df->bsf", x, p["wi_gate"]))
+        h = h * jnp.einsum("bsd,df->bsf", x, p["wi_up"])
+    else:
+        h = act(jnp.einsum("bsd,df->bsf", x, p["wi"]))
+    h = constrain(h, cfg, "dp", None, "tp")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])

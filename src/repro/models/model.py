@@ -1,0 +1,136 @@
+"""The language model: embed -> scan(groups) -> final norm -> logits.
+
+Public entry points (all pure functions over a params pytree):
+  init_params(cfg, key)                         -> params
+  forward_train(cfg, params, batch)             -> (loss, metrics)
+  forward_prefill(cfg, params, tokens, ...)     -> (last_logits, caches)
+  forward_decode(cfg, params, caches, token, pos) -> (logits, caches)
+
+``batch`` carries tokens/labels/positions and, for the VLM/audio stub
+frontends, precomputed frame/patch embeddings (``extra_embeds``) plus a mask
+selecting which sequence positions come from the modality stream.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import (init_group, init_group_cache, stack_decode,
+                     stack_prefill, stack_train)
+from .common import constrain, dtype_of, embed_init, init_rmsnorm, rmsnorm
+from .config import ModelConfig
+
+
+def _default_positions(cfg: ModelConfig, tokens):
+    pos = jnp.broadcast_to(
+        jnp.arange(tokens.shape[1], dtype=jnp.int32)[None], tokens.shape)
+    if cfg.rope_type == "mrope":                 # (3, B, S): t == h == w text
+        pos = jnp.broadcast_to(pos[None], (3,) + tokens.shape)
+    return pos
+
+
+# -- params -------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = dtype_of(cfg.param_dtype)
+    kemb, khead, *gkeys = jax.random.split(key, 2 + cfg.groups)
+    params = {
+        "embed": embed_init(kemb, (cfg.vocab_padded, cfg.d_model), dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+        "groups": jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[init_group(cfg, gk, dtype) for gk in gkeys]),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(
+            khead, (cfg.d_model, cfg.vocab_padded), dtype,
+            std=1.0 / cfg.d_model ** 0.5)
+    return params
+
+
+def abstract_params(cfg: ModelConfig, seed: int = 0):
+    """Shapes-only params (ShapeDtypeStruct) for the dry-run."""
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.random.PRNGKey(seed))
+
+
+# -- pieces -------------------------------------------------------------------
+
+def _embed(cfg: ModelConfig, params, tokens, extra_embeds=None,
+           extra_mask=None):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.frontend != "none" and extra_embeds is not None:
+        # modality stub: replace masked positions with precomputed embeddings
+        h = jnp.where(extra_mask[..., None], extra_embeds.astype(h.dtype), h)
+    return constrain(h.astype(dtype_of(cfg.dtype)), cfg, "dp", None, None)
+
+
+def _logits(cfg: ModelConfig, params, h):
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    w = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = jnp.einsum("bsd,dv->bsv", h, w).astype(jnp.float32)
+    logits = constrain(logits, cfg, "dp", None, "tp")
+    if cfg.vocab_padded != cfg.vocab_size:    # mask padded vocab slots
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e9, logits)
+    return logits
+
+
+def softmax_xent(logits, labels, z_loss: float = 1e-4):
+    """Cross entropy with z-loss; logits f32 (B, S, V), labels int (B, S)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    zl = z_loss * jnp.square(lse)
+    return nll + zl
+
+
+# -- entry points ---------------------------------------------------------------
+
+def forward_train(cfg: ModelConfig, params, batch):
+    """batch: dict(tokens (B,S) i32, labels (B,S) i32, positions, and optional
+    extra_embeds/extra_mask). Returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = _default_positions(cfg, tokens)
+    h = _embed(cfg, params, tokens, batch.get("extra_embeds"),
+               batch.get("extra_mask"))
+    h, aux = stack_train(cfg, params["groups"], h, positions)
+    logits = _logits(cfg, params, h)
+    per_tok = softmax_xent(logits, batch["labels"])
+    loss = per_tok.mean() + 0.01 * aux
+    metrics = {"loss": loss, "nll": per_tok.mean(), "aux_loss": aux}
+    return loss, metrics
+
+
+def forward_prefill(cfg: ModelConfig, params, tokens, positions=None,
+                    extra_embeds=None, extra_mask=None):
+    """Returns (logits at the last position (B, V), caches)."""
+    if positions is None:
+        positions = _default_positions(cfg, tokens)
+    h = _embed(cfg, params, tokens, extra_embeds, extra_mask)
+    h, caches, _ = stack_prefill(cfg, params["groups"], h, positions)
+    logits = _logits(cfg, params, h[:, -1:, :])
+    return logits[:, 0, :], caches
+
+
+def forward_decode(cfg: ModelConfig, params, caches, token, pos):
+    """One decode step. token: (B,) i32; pos: () i32 (write index).
+    Returns (logits (B, V), new caches)."""
+    h = _embed(cfg, params, token[:, None])
+    h, new_caches = stack_decode(cfg, params["groups"], h, caches, pos)
+    logits = _logits(cfg, params, h)
+    return logits[:, 0, :], new_caches
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked decode caches: leading ``groups`` axis on every leaf."""
+    dtype = dtype_of(cfg.dtype)
+    one = init_group_cache(cfg, batch, max_len, dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.groups,) + a.shape), one)
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_caches(cfg, batch, max_len))

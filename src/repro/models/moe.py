@@ -1,0 +1,149 @@
+"""Top-k token-choice MoE with GShard-style grouped dense dispatch/combine.
+
+TPU adaptation (see DESIGN.md): instead of GPU-style gather/scatter grouped
+GEMMs, tokens are routed through dense one-hot dispatch tensors so every step
+is an MXU-friendly einsum — the standard TPU MoE formulation (GShard,
+arXiv:2006.16668). Tokens are split into routing groups of ``MOE_GROUP`` so
+the dispatch tensor stays O(T * group * k) instead of O(T^2 * k); capacity is
+per-group (capacity = factor * group * k / E) and overflow tokens are dropped
+with the residual passing through (Switch semantics, arXiv:2101.03961).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import act_fn, constrain, dense_init
+from .config import ModelConfig
+
+MOE_GROUP = 256          # tokens per routing group
+
+
+def init_moe(cfg: ModelConfig, key, dtype) -> dict:
+    e, d, f = cfg.moe_experts, cfg.d_model, cfg.expert_d_ff
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    p = {"router": dense_init(k0, (d, e), jnp.float32)}
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        p["wi_gate"] = dense_init(k1, (e, d, f), dtype)
+        p["wi_up"] = dense_init(k2, (e, d, f), dtype)
+    else:
+        p["wi"] = dense_init(k1, (e, d, f), dtype)
+    p["wo"] = dense_init(k3, (e, f, d), dtype)
+    return p
+
+
+def _route(cfg: ModelConfig, p, xt):
+    """Shared router: returns (probs, gate_vals, expert_idx, aux)."""
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[..., 0], e, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+    return gate_vals, expert_idx, aux
+
+
+def _expert_ffn(cfg: ModelConfig, p, xin):
+    act = act_fn(cfg.mlp_type)
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        h = act(jnp.einsum("gecd,edf->gecf", xin, p["wi_gate"]))
+        h = h * jnp.einsum("gecd,edf->gecf", xin, p["wi_up"])
+    else:
+        h = act(jnp.einsum("gecd,edf->gecf", xin, p["wi"]))
+    h = constrain(h, cfg, "dp", None, None, "tp")
+    return jnp.einsum("gecf,efd->gecd", h, p["wo"])
+
+
+def moe_apply_gather(cfg: ModelConfig, p, x):
+    """Gather/scatter MoE routing (hillclimb iteration B1; see
+    EXPERIMENTS.md Perf): identical routing semantics to the dense-dispatch
+    path (same stable within-group buffer positions, same capacity drops)
+    but with NO (T, E, C) one-hot dispatch matmuls — buffer fill and combine
+    are group-local gathers/scatter-adds, removing the O(T * gsz * k * D)
+    dispatch FLOPs that dominate at high expert counts (E=40, top-8)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    gsz = min(MOE_GROUP, t)
+    while t % gsz:
+        gsz //= 2
+    g = t // gsz
+    cap = max(int(cfg.moe_capacity_factor * gsz * k / e), 1)
+    xt = constrain(x.reshape(g, gsz, d), cfg, "dp", None, None)
+
+    gate_vals, expert_idx, aux = _route(cfg, p, xt)        # (G, T, k)
+    ids = expert_idx.reshape(g, gsz * k)                   # flattened (t, j)
+    order = jnp.argsort(ids, axis=1, stable=True)          # group-local sort
+    ids_sorted = jnp.take_along_axis(ids, order, axis=1)
+    token_of = order // k
+    # position within expert = rank among equal ids (stable sort keeps the
+    # flattened (token, choice) order => identical to the dense cumsum)
+    first = jax.vmap(lambda a: jnp.searchsorted(a, a, side="left"))(ids_sorted)
+    pos = jnp.arange(gsz * k)[None, :] - first
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, cap)                      # overflow slot
+
+    # Scatter/gather are vmapped over the group axis so they lower to
+    # BATCHED gathers/scatters: GSPMD partitions the batch (group) dim
+    # trivially instead of treating the explicit 3-array-index scatter as
+    # potentially cross-group (which triggered a collective-permute storm —
+    # hillclimb iteration B2, see EXPERIMENTS.md §Perf).
+    def dispatch_one(xt_g, ids_g, pos_g, tok_g, keep_g):
+        rows = xt_g[tok_g] * keep_g[:, None].astype(xt_g.dtype)   # (Tk, D)
+        buf = jnp.zeros((e, cap + 1, d), x.dtype)
+        return buf.at[ids_g, pos_g].add(rows)[:, :cap, :]
+
+    xin = jax.vmap(dispatch_one)(xt, ids_sorted, pos_c, token_of, keep)
+    xin = constrain(xin, cfg, "dp", None, None, None)
+
+    yout = _expert_ffn(cfg, p, xin)                        # (G, E, cap, D)
+    gates_sorted = jnp.take_along_axis(
+        gate_vals.reshape(g, gsz * k), order, axis=1)
+
+    def combine_one(y_g, ids_g, pos_g, tok_g, w_g):
+        padded = jnp.pad(y_g, ((0, 0), (0, 1), (0, 0)))
+        back = padded[ids_g, pos_g] * w_g[:, None].astype(y_g.dtype)
+        return jnp.zeros((gsz, d), x.dtype).at[tok_g].add(back)
+
+    y = jax.vmap(combine_one)(yout, ids_sorted, pos_c, token_of,
+                              (gates_sorted * keep))
+    return y.reshape(b, s, d), aux
+
+
+def moe_apply(cfg: ModelConfig, p, x):
+    """x: (B, S, D) -> (B, S, D), aux_loss (scalar, f32)."""
+    if cfg.moe_impl == "gather":
+        return moe_apply_gather(cfg, p, x)
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    gsz = min(MOE_GROUP, t)
+    while t % gsz:
+        gsz //= 2
+    g = t // gsz
+    cap = max(int(cfg.moe_capacity_factor * gsz * k / e), 1)
+    xt = constrain(x.reshape(g, gsz, d), cfg, "dp", None, None)
+
+    gate_vals, expert_idx, aux = _route(cfg, p, xt)             # (G, T, k)
+
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)   # (G, T, k, E)
+    flat = onehot.reshape(g, gsz * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                       # (G, T*k, E)
+    pos = jnp.einsum("gxe,gxe->gx", pos, flat).astype(jnp.int32)
+    keep = pos < cap
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap,
+                            dtype=jnp.float32)                  # (G, T*k, C)
+    disp_flat = flat[..., None] * pos_oh[..., None, :]          # (G, T*k, E, C)
+    dispatch = disp_flat.reshape(g, gsz, k, e, cap).sum(axis=2)
+    combine = (disp_flat * gate_vals.reshape(g, gsz * k, 1, 1)
+               ).reshape(g, gsz, k, e, cap).sum(axis=2)
+
+    xin = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), xt)
+    xin = constrain(xin, cfg, "dp", None, None, None)
+    yout = _expert_ffn(cfg, p, xin)
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), yout)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,162 @@
+"""Mamba-2 mixer via the SSD (state-space duality) chunked algorithm
+(arXiv:2405.21060), ngroups = 1.
+
+TPU adaptation (see DESIGN.md): the chunked SSD formulation replaces Mamba-1's
+sequential selective scan with per-chunk matmuls (MXU-friendly) plus a short
+`lax.scan` over chunk states — Jamba's Mamba-1 layers are realized with this
+same SSD mixer. The ``repro.kernels.ssd_scan`` Pallas kernel is the TPU
+production implementation of ``_ssd_chunked``.
+
+Layer I/O:
+  train/prefill: x (B, S, D) -> y (B, S, D) [+ final (conv_state, ssm_state)]
+  decode: one token step carrying (conv_state (B, convdim, d_conv-1),
+          ssm_state (B, H, P, N)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import constrain, dense_init
+from .config import ModelConfig
+
+
+def init_mamba(cfg: ModelConfig, key, dtype) -> dict:
+    d, di, n, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * n
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        # in_proj -> [z (di), x (di), B (n), C (n), dt (nh)]
+        "in_proj": dense_init(k1, (d, 2 * di + 2 * n + nh), dtype),
+        "conv_w": dense_init(k2, (cfg.ssm_conv, conv_dim), dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "out_proj": dense_init(k3, (di, d), dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n:]
+    assert dt.shape[-1] == nh
+    return z, xbc, dt
+
+
+def _causal_conv(p, xbc):
+    """Depthwise causal conv over (B, S, C) with kernel (K, C)."""
+    k = p["conv_w"].shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * p["conv_w"][i][None, None, :]
+              for i in range(k))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def _ssd_chunked(cfg: ModelConfig, xh, dt, a, b_mat, c_mat, init_state=None):
+    """Chunked SSD. xh: (B, S, H, P); dt: (B, S, H) (post-softplus);
+    a: (H,) (negative); b_mat/c_mat: (B, S, N). Returns y (B, S, H, P) and the
+    final state (B, H, P, N)."""
+    bsz, s, h, p_dim = xh.shape
+    n = b_mat.shape[-1]
+    q = min(cfg.ssm_chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+    xc = xh.reshape(bsz, nc, q, h, p_dim)
+    dtc = dt.reshape(bsz, nc, q, h)
+    bc = b_mat.reshape(bsz, nc, q, n)
+    cc = c_mat.reshape(bsz, nc, q, n)
+
+    dta = dtc * a[None, None, None, :]                  # (B, nc, Q, H) <= 0
+    seg = jnp.cumsum(dta, axis=2)                       # within-chunk cumsum
+    # intra-chunk ("diagonal") term: attention-like matmuls
+    scores = jnp.einsum("bcqn,bckn->bcqk", cc, bc)      # (B, nc, Q, Q)
+    decay = jnp.exp(seg[:, :, :, None, :] - seg[:, :, None, :, :])
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    lmat = jnp.where(causal[None, None, :, :, None], decay, 0.0)
+    w = scores[..., None] * lmat * dtc[:, :, None, :, :]   # (B,nc,Q,K,H)
+    y_diag = jnp.einsum("bcqkh,bckhp->bcqhp", w.astype(xh.dtype), xc)
+
+    # chunk summaries: Z_c = sum_j exp(seg_last - seg_j) dt_j x_j b_j^T
+    last = seg[:, :, -1:, :]                            # (B, nc, 1, H)
+    wstate = jnp.exp(last - seg) * dtc                  # (B, nc, Q, H)
+    z_c = jnp.einsum("bcqh,bcqhp,bcqn->bchpn",
+                     wstate.astype(xh.dtype), xc, bc.astype(xh.dtype))
+    chunk_decay = jnp.exp(jnp.sum(dta, axis=2))         # (B, nc, H)
+
+    # inter-chunk recurrence over nc states
+    def step(state, inp):
+        zc, dec = inp                                   # (B,H,P,N), (B,H)
+        new = state * dec[:, :, None, None].astype(state.dtype) + zc
+        return new, state                               # emit state BEFORE chunk
+
+    s0 = (jnp.zeros((bsz, h, p_dim, n), xh.dtype) if init_state is None
+          else init_state.astype(xh.dtype))
+    zc_t = jnp.moveaxis(z_c, 1, 0)                      # (nc, B, H, P, N)
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)
+    final_state, prev_states = jax.lax.scan(step, s0, (zc_t, dec_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)       # (B, nc, H, P, N)
+
+    # inter-chunk ("off-diagonal") contribution
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                       cc.astype(xh.dtype),
+                       jnp.exp(seg).astype(xh.dtype), prev_states)
+    y = (y_diag + y_off).reshape(bsz, s, h, p_dim)
+    return y, final_state
+
+
+def mamba_train(cfg: ModelConfig, p, x, return_state: bool = False):
+    """Full-sequence SSD pass. x: (B, S, D)."""
+    bsz, s, _ = x.shape
+    di, n, nh, ph = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    proj = constrain(jnp.einsum("bsd,de->bse", x, p["in_proj"]),
+                     cfg, "dp", None, "tp")
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc = _causal_conv(p, xbc)
+    xin = xbc[..., :di].reshape(bsz, s, nh, ph)
+    b_mat = xbc[..., di:di + n]
+    c_mat = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    y, state = _ssd_chunked(cfg, xin, dt, a, b_mat, c_mat)
+    y = y + xin * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(bsz, s, di) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    if return_state:
+        k = cfg.ssm_conv
+        # conv state: last k-1 pre-activation inputs of xbc projection
+        proj_tail = _split_proj(cfg, proj)[1][:, -(k - 1):, :]
+        return out, {"conv": proj_tail, "ssm": state}
+    return out
+
+
+def mamba_decode(cfg: ModelConfig, p, x, cache: dict):
+    """Single-token step. x: (B, 1, D); cache: conv (B, k-1, convdim),
+    ssm (B, H, P, N)."""
+    bsz = x.shape[0]
+    di, n, nh, ph = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc_new, dt = _split_proj(cfg, proj)
+    # causal conv over the (k-1) cached + current inputs
+    window = jnp.concatenate([cache["conv"], xbc_new], axis=1)  # (B, k, C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out)[:, None, :]
+    xin = xbc[..., :di].reshape(bsz, nh, ph)
+    b_mat = xbc[:, 0, di:di + n]                                 # (B, N)
+    c_mat = xbc[:, 0, di + n:]
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt1 * a[None, :])                            # (B, H)
+    state = cache["ssm"].astype(jnp.float32)
+    upd = (dt1[:, :, None, None] * xin.astype(jnp.float32)[:, :, :, None]
+           * b_mat.astype(jnp.float32)[:, None, None, :])
+    state = state * decay[:, :, None, None] + upd                # (B,H,P,N)
+    y = jnp.einsum("bhpn,bn->bhp", state, c_mat.astype(jnp.float32))
+    y = y + xin.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(bsz, 1, di).astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    new_cache = {"conv": window[:, 1:, :], "ssm": state.astype(cache["ssm"].dtype)}
+    return out, new_cache

@@ -1,0 +1,4 @@
+from .cluster import (Cluster, TenantJob, TPUPod, job_from_artifact,
+                      schedule, schedule_detail)
+from .serving import (DynamicDispatcher, ReplicaGroup, Tenant,
+                      admitted_rates, dispatch_problem)

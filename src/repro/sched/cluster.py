@@ -1,0 +1,137 @@
+"""PS-DSF over a heterogeneous TPU fleet: the paper's mechanism as the
+framework's cluster scheduler.
+
+Servers   = TPU slices/pods with resource vectors
+            [chips, HBM GB, host-DRAM GB, ICI GB/s, DCN GB/s].
+Users     = tenant training/serving jobs; the per-task demand vector is the
+            per-replica footprint, derived either by hand or directly from a
+            dry-run artifact (bytes-per-device and collective traffic from
+            launch/dryrun.py — closing the loop between the roofline and the
+            scheduler).
+Placement = delta[n, i] from hard constraints (min HBM/chip, generation
+            allow-list, multi-pod DCN requirement) — exactly the paper's
+            heterogeneity + placement-constraint setting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import AllocationProblem, solve_psdsf_rdm
+
+RESOURCES = ("chips", "hbm_gb", "host_gb", "ici_gbps", "dcn_gbps")
+
+
+@dataclasses.dataclass
+class TPUPod:
+    name: str
+    generation: str              # "v5e" | "v5p" | ...
+    chips: int
+    hbm_gb_per_chip: float
+    host_gb: float
+    ici_gbps: float              # aggregate intra-pod ICI
+    dcn_gbps: float              # pod-to-pod
+    healthy: bool = True
+    capacity_scale: float = 1.0  # straggler mitigation degrades this
+
+    def capacity(self) -> np.ndarray:
+        if not self.healthy:
+            return np.zeros(len(RESOURCES))
+        return self.capacity_scale * np.array([
+            self.chips, self.chips * self.hbm_gb_per_chip, self.host_gb,
+            self.ici_gbps, self.dcn_gbps])
+
+
+@dataclasses.dataclass
+class TenantJob:
+    name: str
+    weight: float
+    # per-replica demand vector
+    chips: float
+    hbm_gb: float
+    host_gb: float
+    ici_gbps: float
+    dcn_gbps: float
+    # placement constraints
+    min_hbm_per_chip: float = 0.0
+    generations: Optional[Sequence[str]] = None
+    needs_dcn: bool = False
+
+    def demand(self) -> np.ndarray:
+        return np.array([self.chips, self.hbm_gb, self.host_gb,
+                         self.ici_gbps, self.dcn_gbps])
+
+    def eligible(self, pod: TPUPod) -> bool:
+        if self.generations and pod.generation not in self.generations:
+            return False
+        if pod.hbm_gb_per_chip < self.min_hbm_per_chip:
+            return False
+        if self.needs_dcn and pod.dcn_gbps <= 0:
+            return False
+        return True
+
+
+def job_from_artifact(name: str, artifact_path: str, weight: float = 1.0,
+                      replica_chips: int = 256,
+                      hbm_per_chip_gb: float = 16.0,
+                      **constraints) -> TenantJob:
+    """Derive a job's per-replica demand vector from a dry-run artifact."""
+    art = json.loads(Path(artifact_path).read_text())
+    mem = art["memory_analysis"]
+    # SPMD module sizes are already per-device
+    per_dev_gb = (mem["argument_size_in_bytes"] + mem["temp_size_in_bytes"]
+                  + mem["output_size_in_bytes"]) / 1e9
+    wire = sum(c.get("wire_bytes", 0.0) for c in art["collectives"].values())
+    return TenantJob(
+        name=name, weight=weight, chips=replica_chips,
+        hbm_gb=min(per_dev_gb, hbm_per_chip_gb) * replica_chips,
+        host_gb=replica_chips * 0.5,
+        ici_gbps=wire / 1e9,          # per-step wire bytes ~ sustained GB/s
+        dcn_gbps=1.0 if constraints.get("needs_dcn") else 0.0,
+        **constraints)
+
+
+class Cluster:
+    def __init__(self, pods: List[TPUPod]):
+        self.pods = pods
+
+    def mark_failed(self, name: str) -> bool:
+        for p in self.pods:
+            if p.name == name and p.healthy:
+                p.healthy = False
+                return True
+        return False
+
+    def degrade(self, name: str, scale: float) -> bool:
+        for p in self.pods:
+            if p.name == name and p.capacity_scale > scale:
+                p.capacity_scale = scale
+                return True
+        return False
+
+    def problem(self, jobs: Sequence[TenantJob]) -> AllocationProblem:
+        demands = np.stack([j.demand() for j in jobs])
+        caps = np.stack([p.capacity() for p in self.pods])
+        elig = np.array([[1.0 if j.eligible(p) else 0.0 for p in self.pods]
+                         for j in jobs])
+        weights = np.array([j.weight for j in jobs])
+        return AllocationProblem(demands, caps, weights, elig)
+
+
+def schedule(cluster: Cluster, jobs: Sequence[TenantJob]) -> Dict[str, float]:
+    """PS-DSF (RDM) replica counts per job (continuous; launcher floors)."""
+    prob = cluster.problem(jobs)
+    alloc, info = solve_psdsf_rdm(prob)
+    if not info.converged:
+        raise RuntimeError("PS-DSF did not converge on cluster problem")
+    return {j.name: float(x) for j, x in zip(jobs, alloc.tasks_per_user)}
+
+
+def schedule_detail(cluster: Cluster, jobs: Sequence[TenantJob]):
+    prob = cluster.problem(jobs)
+    alloc, _ = solve_psdsf_rdm(prob)
+    return alloc

@@ -1,0 +1,3 @@
+from .optimizer import OptimizerConfig, adamw_update, init_opt_state
+from .step import (abstract_train_state, build_decode_step,
+                   build_prefill_step, build_train_step, make_train_state)

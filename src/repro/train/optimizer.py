@@ -1,0 +1,80 @@
+"""AdamW with fully-sharded moments (ZeRO-style: moments inherit the param
+sharding), fp32 update math regardless of storage dtype, global-norm clipping
+and a linear-warmup + cosine schedule. No optax dependency — pure jax."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dtype_of
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 200
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"
+
+
+def schedule(oc: OptimizerConfig, step):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(oc.warmup_steps, 1)
+    prog = jnp.clip((step - oc.warmup_steps)
+                    / jnp.maximum(oc.decay_steps - oc.warmup_steps, 1), 0, 1)
+    cos = oc.min_lr_ratio + (1 - oc.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return oc.peak_lr * jnp.where(step < oc.warmup_steps, warm, cos)
+
+
+def init_opt_state(params, oc: OptimizerConfig):
+    dt = dtype_of(oc.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))),
+                      tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def adamw_update(params, grads, opt_state, oc: OptimizerConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = schedule(oc, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm, 1e-9))
+    b1, b2 = oc.b1, oc.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    sdt = dtype_of(oc.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + oc.eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (delta + oc.weight_decay * p32)
+        return p_new.astype(p.dtype), m32.astype(sdt), v32.astype(sdt)
+
+    out = jax.tree.map(upd, params, grads, opt_state["mu"], opt_state["nu"])
+    flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_params = treedef.unflatten([t[0] for t in flat])
+    new_mu = treedef.unflatten([t[1] for t in flat])
+    new_nu = treedef.unflatten([t[2] for t in flat])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}, metrics

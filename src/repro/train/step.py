@@ -1,0 +1,100 @@
+"""Step builders: train (fwd + bwd + AdamW), prefill, decode.
+
+All builders return pure functions ready for ``jax.jit`` with the sharding
+specs from ``repro.launch.sharding``. Gradient accumulation (microbatching)
+is a ``lax.scan`` over leading microbatch splits — a standard memory lever.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward_decode, forward_prefill, forward_train
+from repro.models.config import ModelConfig
+from .optimizer import OptimizerConfig, adamw_update, init_opt_state
+
+
+def make_train_state(cfg: ModelConfig, params, oc: OptimizerConfig):
+    return {"params": params, "opt": init_opt_state(params, oc)}
+
+
+def abstract_train_state(cfg: ModelConfig, oc: OptimizerConfig):
+    from repro.models import abstract_params
+    params = abstract_params(cfg)
+    return jax.eval_shape(lambda p: make_train_state(cfg, p, oc), params)
+
+
+def build_train_step(cfg: ModelConfig, oc: OptimizerConfig,
+                     microbatches: int = 1):
+    """(state, batch) -> (state, metrics). ``batch`` leaves lead with the
+    global-on-device batch dim; with microbatches > 1 the loss/grad is
+    accumulated over ``microbatches`` sequential splits."""
+
+    def loss_fn(params, batch):
+        return forward_train(cfg, params, batch)
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        bsz = batch["tokens"].shape[0]
+
+        def split(x):
+            # batch is the leading dim for most leaves; M-RoPE positions are
+            # (3, B, S) with batch second
+            if x.shape[0] == bsz:
+                return x.reshape((microbatches, bsz // microbatches)
+                                 + x.shape[1:])
+            assert x.ndim >= 2 and x.shape[1] == bsz, x.shape
+            out = x.reshape((x.shape[0], microbatches, bsz // microbatches)
+                            + x.shape[2:])
+            return jnp.moveaxis(out, 1, 0)
+
+        mb = jax.tree.map(split, batch)
+
+        def body(carry, mbatch):
+            acc_grads, acc_loss = carry
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mbatch)
+            acc_grads = jax.tree.map(jnp.add, acc_grads, grads)
+            return (acc_grads, acc_loss + loss), None
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss), _ = jax.lax.scan(
+            body, (zero, jnp.zeros((), jnp.float32)), mb)
+        inv = 1.0 / microbatches
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        loss = loss * inv
+        return loss, {"loss": loss}, grads
+
+    def train_step(state, batch):
+        loss, metrics, grads = grads_of(state["params"], batch)
+        new_params, new_opt, opt_metrics = adamw_update(
+            state["params"], grads, state["opt"], oc)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return forward_prefill(
+            cfg, params, batch["tokens"], batch.get("positions"),
+            batch.get("extra_embeds"), batch.get("extra_mask"))
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig):
+    def decode_step(params, caches, token, pos):
+        logits, new_caches = forward_decode(cfg, params, caches, token, pos)
+        # greedy next token (serving engine may re-sample on host)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_caches
+    return decode_step

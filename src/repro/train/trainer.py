@@ -1,0 +1,80 @@
+"""The training driver: data pipeline + train step + checkpointing + fault
+hooks, in one restart-safe loop.
+
+Used at smoke scale by tests/examples on CPU and by launch/train.py under a
+production mesh (same code; the mesh context and shardings come from the
+launcher).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, global_batch_at
+from repro.ft.failures import StragglerDetector
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from .optimizer import OptimizerConfig
+from .step import build_train_step, make_train_state
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 25
+    log_every: int = 10
+    ckpt_dir: str = "artifacts/ckpt"
+    microbatches: int = 1
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, oc: OptimizerConfig,
+                 tc: TrainerConfig, data_cfg: DataConfig,
+                 hooks: Optional[Callable] = None):
+        self.cfg, self.oc, self.tc, self.data_cfg = cfg, oc, tc, data_cfg
+        self.ckpt = CheckpointManager(tc.ckpt_dir)
+        self.step_fn = jax.jit(build_train_step(cfg, oc, tc.microbatches),
+                               donate_argnums=(0,))
+        self.straggler = StragglerDetector()
+        self.hooks = hooks
+        self.state = None
+        self.start_step = 0
+
+    def init_or_restore(self):
+        params = init_params(self.cfg, jax.random.PRNGKey(self.tc.seed))
+        self.state = make_train_state(self.cfg, params, self.oc)
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            self.state = self.ckpt.restore(latest, target=self.state)
+            self.start_step = latest
+        return self.start_step
+
+    def run(self) -> dict:
+        if self.state is None:
+            self.init_or_restore()
+        losses = []
+        for step in range(self.start_step, self.tc.total_steps):
+            batch = global_batch_at(self.data_cfg, step)
+            t0 = time.time()
+            self.state, metrics = self.step_fn(self.state, batch)
+            dt = time.time() - t0
+            self.straggler.record("worker0", dt)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if not np.isfinite(loss):
+                raise FloatingPointError(f"loss diverged at step {step}")
+            if (step + 1) % self.tc.log_every == 0:
+                print(f"step {step + 1}: loss={loss:.4f} "
+                      f"({dt * 1e3:.0f} ms)", flush=True)
+            if (step + 1) % self.tc.ckpt_every == 0:
+                self.ckpt.save(step + 1, self.state)
+            if self.hooks:
+                self.hooks(step, self.state, metrics)
+        self.ckpt.save(self.tc.total_steps, self.state, block=True)
+        return {"losses": losses, "final_step": self.tc.total_steps}

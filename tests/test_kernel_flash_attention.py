@@ -1,0 +1,66 @@
+"""flash_attention kernel vs pure-jnp oracle (interpret mode), shape/dtype
+sweep incl. GQA/MQA ratios and non-default block sizes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _mk(b, s, hq, hkv, d, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+    return q, k, v
+
+
+CASES = [
+    # b, s, hq, hkv, d, bq, bk
+    (1, 256, 4, 4, 64, 128, 128),      # MHA
+    (2, 256, 8, 2, 64, 128, 64),       # GQA 4:1, uneven blocks
+    (1, 512, 4, 1, 128, 128, 256),     # MQA, d=128
+    (2, 128, 2, 2, 32, 128, 128),      # block == s
+]
+
+
+@pytest.mark.parametrize("b,s,hq,hkv,d,bq,bk", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_ref(b, s, hq, hkv, d, bq, bk, dtype):
+    q, k, v = _mk(b, s, hq, hkv, d, dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                          interpret=True)
+    ref = attention_ref(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                        jnp.swapaxes(v, 1, 2), causal=True)
+    ref = jnp.swapaxes(ref, 1, 2)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_non_causal():
+    q, k, v = _mk(1, 256, 4, 4, 64, jnp.float32, seed=3)
+    out = flash_attention(q, k, v, causal=False, block_q=128, block_k=128,
+                          interpret=True)
+    ref = attention_ref(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                        jnp.swapaxes(v, 1, 2), causal=False)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(jnp.swapaxes(ref, 1, 2), np.float32),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_matches_model_attention():
+    """Cross-check against the model's reference _attend (3rd implementation)."""
+    from repro.models.attention import _attend
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config("qwen3_1_7b")
+    b, s, d = 2, 128, 16
+    q, k, v = _mk(b, s, 4, 2, d, jnp.float32, seed=7)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          interpret=True)
+    ref = _attend(cfg, q, k, v, q_offset=0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)

@@ -1,0 +1,119 @@
+"""ssd_scan + decode_attention + psdsf_vds kernels vs oracles (interpret)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssd_scan.kernel import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.psdsf_vds.kernel import vds_argmin
+from repro.kernels.psdsf_vds.ref import vds_argmin_ref
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("b,h,s,p,n,chunk", [
+        (1, 2, 128, 32, 16, 32),
+        (2, 4, 256, 64, 32, 64),
+        (1, 1, 64, 16, 8, 64),     # single chunk
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_sequential_recurrence(self, b, h, s, p, n, chunk, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        x = jax.random.normal(ks[0], (b, h, s, p), dtype)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, h, s))) * 0.5
+        a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+        bm = jax.random.normal(ks[3], (b, s, n), dtype) * 0.5
+        cm = jax.random.normal(jax.random.PRNGKey(9), (b, s, n), dtype) * 0.5
+        y = ssd_scan(x, dt.astype(jnp.float32), a, bm, cm, chunk=chunk,
+                     interpret=True)
+        y_ref = ssd_scan_ref(x.astype(jnp.float32), dt, a,
+                             bm.astype(jnp.float32), cm.astype(jnp.float32))
+        tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(y_ref, np.float32),
+                                   rtol=tol, atol=tol)
+
+    def test_matches_model_ssd(self):
+        """3rd implementation cross-check: the model's _ssd_chunked."""
+        from repro.models.ssm import _ssd_chunked
+        from repro.configs import get_smoke_config
+        cfg = get_smoke_config("mamba2_1_3b")   # ssm_chunk=16
+        b, h, s, p, n = 1, 2, 64, 16, 16
+        ks = jax.random.split(jax.random.PRNGKey(1), 4)
+        x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.5
+        a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+        bm = jax.random.normal(ks[3], (b, s, n)) * 0.5
+        cm = jax.random.normal(jax.random.PRNGKey(5), (b, s, n)) * 0.5
+        y_model, _ = _ssd_chunked(cfg, x, dt, a, bm, cm)
+        y_kern = ssd_scan(jnp.transpose(x, (0, 2, 1, 3)),
+                          jnp.transpose(dt, (0, 2, 1)), a, bm, cm,
+                          chunk=16, interpret=True)
+        np.testing.assert_allclose(np.asarray(jnp.transpose(y_kern, (0, 2, 1, 3))),
+                                   np.asarray(y_model), rtol=2e-4, atol=2e-4)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("b,hq,hkv,s,d,blk,kv_len", [
+        (1, 4, 2, 256, 64, 128, 100),
+        (2, 8, 1, 512, 128, 256, 512),    # MQA, full cache
+        (1, 4, 4, 128, 32, 128, 1),       # single valid slot
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, b, hq, hkv, s, d, blk, kv_len, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = jax.random.normal(ks[0], (b, 1, hq, d), dtype)
+        kc = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+        vc = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+        out = decode_attention(q, kc, vc, jnp.int32(kv_len),
+                               num_kv_heads=hkv, block_k=blk, interpret=True)
+        rep = hq // hkv
+        qg = q[:, 0].reshape(b, hkv, rep, d)
+        ref = decode_attention_ref(qg, jnp.swapaxes(kc, 1, 2),
+                                   jnp.swapaxes(vc, 1, 2), kv_len)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(
+            np.asarray(out[:, 0].reshape(b, hkv, rep, d), np.float32),
+            np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+class TestVDSKernel:
+    @pytest.mark.parametrize("n,k,bn,bk", [
+        (256, 128, 64, 64),
+        (512, 256, 256, 128),
+        (64, 128, 64, 128),
+    ])
+    def test_matches_ref(self, n, k, bn, bk):
+        rng = np.random.default_rng(3)
+        gamma = rng.uniform(0.1, 50.0, (n, k)).astype(np.float32)
+        gamma[rng.random((n, k)) < 0.3] = 0.0       # ineligible pairs
+        xphi = rng.uniform(0.0, 20.0, n).astype(np.float32)
+        mn, arg = vds_argmin(jnp.asarray(xphi), jnp.asarray(gamma),
+                             block_n=bn, block_k=bk, interpret=True)
+        mn_ref, arg_ref = vds_argmin_ref(jnp.asarray(xphi), jnp.asarray(gamma))
+        np.testing.assert_allclose(np.asarray(mn), np.asarray(mn_ref),
+                                   rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(arg), np.asarray(arg_ref))
+
+    def test_matches_solver_vds(self):
+        """Consistency with the numpy scheduler math (Eq. 16)."""
+        from repro.core import AllocationProblem, gamma_matrix
+        from repro.core.gamma import normalized_vds
+        rng = np.random.default_rng(4)
+        n, k = 64, 128
+        prob = AllocationProblem(
+            demands=rng.uniform(0.1, 2.0, (n, 3)),
+            capacities=rng.uniform(5.0, 20.0, (k, 3)),
+            weights=rng.uniform(0.5, 2.0, n),
+            eligibility=(rng.random((n, k)) > 0.2).astype(float))
+        g = gamma_matrix(prob)
+        x = rng.uniform(0.0, 5.0, (n, k))
+        s_norm = normalized_vds(prob, x)            # (N, K), inf if inelig
+        xphi = x.sum(axis=1) / prob.weights
+        mn, arg = vds_argmin(jnp.asarray(xphi, jnp.float32),
+                             jnp.asarray(g, jnp.float32),
+                             block_n=64, block_k=128, interpret=True)
+        expect = np.where(np.isfinite(s_norm), s_norm, 3.0e38).min(axis=0)
+        np.testing.assert_allclose(np.asarray(mn), expect, rtol=1e-5)

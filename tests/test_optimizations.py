@@ -1,0 +1,135 @@
+"""Equivalence tests for the §Perf optimizations (EXPERIMENTS.md):
+gather vs dense MoE routing, flash custom-vjp vs exact attention gradients,
+select vs DUS cache update, fp8 KV cache smoke."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import forward_decode, init_caches, init_params
+
+
+class TestMoEImpls:
+    @pytest.mark.parametrize("arch", ["granite_moe_3b_a800m", "grok_1_314b",
+                                      "jamba_v0_1_52b"])
+    def test_gather_matches_dense(self, arch):
+        from repro.models.moe import init_moe, moe_apply
+        cfg = get_smoke_config(arch)
+        p = init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model),
+                              jnp.float32)
+        yd, auxd = moe_apply(dataclasses.replace(cfg, moe_impl="dense"), p, x)
+        yg, auxg = moe_apply(dataclasses.replace(cfg, moe_impl="gather"), p, x)
+        np.testing.assert_allclose(np.asarray(yd), np.asarray(yg),
+                                   rtol=1e-4, atol=1e-5)
+        assert float(abs(auxd - auxg)) < 1e-6
+
+    def test_gather_gradients_match_dense(self):
+        from repro.models.moe import init_moe, moe_apply
+        cfg = get_smoke_config("granite_moe_3b_a800m")
+        p = init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, cfg.d_model),
+                              jnp.float32)
+        def loss(impl, p_):
+            y, aux = moe_apply(dataclasses.replace(cfg, moe_impl=impl), p_, x)
+            return (y ** 2).sum() + aux
+        gd = jax.grad(lambda p_: loss("dense", p_))(p)
+        gg = jax.grad(lambda p_: loss("gather", p_))(p)
+        for key in ("wi_gate", "wo", "router"):
+            np.testing.assert_allclose(np.asarray(gd[key]),
+                                       np.asarray(gg[key]),
+                                       rtol=5e-4, atol=1e-5)
+
+
+class TestFlashVJP:
+    @pytest.mark.parametrize("hq,hkv,window", [(4, 2, 0), (4, 1, 0),
+                                               (4, 4, 48)])
+    def test_gradients_match_exact(self, hq, hkv, window):
+        from repro.models.attention import _make_flash_train, _attend
+        cfg = dataclasses.replace(get_smoke_config("qwen3_1_7b"),
+                                  sliding_window=window)
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        b, s, d = 2, 128, 16
+        q = jax.random.normal(ks[0], (b, s, hq, d))
+        k = jax.random.normal(ks[1], (b, s, hkv, d))
+        v = jax.random.normal(ks[2], (b, s, hkv, d))
+        f = _make_flash_train(32, window)
+        gf = jax.grad(lambda *a: (f(*a) ** 2).sum(), argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(lambda *a: (_attend(cfg, *a, q_offset=0) ** 2).sum(),
+                      argnums=(0, 1, 2))(q, k, v)
+        for a, b_ in zip(gf, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       rtol=2e-4, atol=2e-5)
+
+
+class TestDecodeCacheUpdate:
+    def test_select_matches_dus(self):
+        arch = "qwen3_1_7b"
+        outs = {}
+        for impl in ("select", "dus"):
+            cfg = dataclasses.replace(get_smoke_config(arch),
+                                      decode_cache_update=impl)
+            params = init_params(cfg, jax.random.PRNGKey(0))
+            caches = init_caches(cfg, 2, max_len=16)
+            tok = jnp.array([3, 5], jnp.int32)
+            lg1, caches = forward_decode(cfg, params, caches, tok, jnp.int32(0))
+            lg2, _ = forward_decode(cfg, params, caches, tok + 1, jnp.int32(1))
+            outs[impl] = (np.asarray(lg1), np.asarray(lg2))
+        np.testing.assert_allclose(outs["select"][0], outs["dus"][0],
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(outs["select"][1], outs["dus"][1],
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestFP8Cache:
+    def test_fp8_cache_decode_smoke(self):
+        cfg = dataclasses.replace(get_smoke_config("qwen3_1_7b"),
+                                  cache_dtype="float8_e4m3fn")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        caches = init_caches(cfg, 2, max_len=16)
+        assert caches["0"]["k"].dtype == jnp.float8_e4m3fn
+        tok = jnp.array([3, 5], jnp.int32)
+        lg, caches = forward_decode(cfg, params, caches, tok, jnp.int32(0))
+        assert np.isfinite(np.asarray(lg)).all()
+        lg2, _ = forward_decode(cfg, params, caches, tok + 1, jnp.int32(1))
+        assert np.isfinite(np.asarray(lg2)).all()
+
+
+class TestPerSlotPositions:
+    def test_staggered_decode_matches_prefill(self):
+        """Two sequences decoding at DIFFERENT offsets in one batch (the
+        continuous-batching case) must match their teacher-forced logits."""
+        from repro.models.model import _embed, _logits
+        from repro.models.blocks import stack_train
+        cfg = get_smoke_config("qwen3_1_7b")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                                  cfg.vocab_size, dtype=jnp.int32)
+        pos_full = jnp.arange(8, dtype=jnp.int32)[None]
+        h = _embed(cfg, params, toks)
+        h, _ = stack_train(cfg, params["groups"], h,
+                           jnp.broadcast_to(pos_full, (2, 8)))
+        full_logits = np.asarray(_logits(cfg, params, h))
+
+        # seq 0 starts decoding at t=0; seq 1 is staggered two steps behind
+        caches = init_caches(cfg, 2, max_len=8)
+        offsets = np.array([0, -2])
+        got = {0: {}, 1: {}}
+        for t in range(8):
+            pos = jnp.asarray(np.maximum(t + offsets, 0), jnp.int32)
+            tok = jnp.stack([toks[0, min(t, 7)],
+                             toks[1, max(t - 2, 0)]]).astype(jnp.int32)
+            lg, caches = forward_decode(cfg, params, caches, tok, pos)
+            if t < 8:
+                got[0][t] = np.asarray(lg[0])
+            if 0 <= t - 2:
+                got[1][t - 2] = np.asarray(lg[1])
+        for b, off in ((0, 0), (1, 2)):
+            for step_idx in range(6 if b else 8):
+                np.testing.assert_allclose(
+                    got[b][step_idx], full_logits[b, step_idx],
+                    rtol=5e-4, atol=5e-4,
+                    err_msg=f"batch {b} step {step_idx}")

@@ -1,0 +1,176 @@
+"""The paper's worked examples, used as exact regression anchors.
+
+Figure 1 instance (Sections II-B, III):
+  c1 = [9 cores, 12 GB, 100 Mb/s], c2 = [12, 12, 0]
+  d1 = [1, 2, 10], d2 = [1, 2, 1], d3 = [1, 2, 0]; phi = [1, 1, 2]
+  - PS-DSF:  x = (3, 3, 6)                      (Section II-B)
+  - C-DRFH:  x = (2.609, 3.130, 6.261)          (Section II-B)
+  - TSF:     x = (2, 2, 8)                      (Section II-B)
+
+Figure 2/3 instance (Section III-A):
+  same servers; d1 = [1.5, 1, 10], d2 = [1, 2, 10], d3 = [.5, 1, 0],
+  d4 = [1, .5, 0]; equal weights
+  - PS-DSF (RDM): x1 = x2 = 3.6 (server 1), x3 = x4 = 8 (server 2)
+  - gamma/VDS values quoted in Section III-A.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (AllocationProblem, algorithm1_literal, gamma_matrix,
+                        gamma_unconstrained_total, normalized_vds,
+                        solve_cdrfh, solve_psdsf_rdm, solve_psdsf_tdm,
+                        solve_tsf, solve_drf_single_pool)
+from repro.core.properties import (check_bottleneck_structure_rdm,
+                                   check_envy_freeness, check_feasible_rdm,
+                                   check_feasible_tdm, check_pareto_tdm,
+                                   check_sharing_incentive)
+
+CAPS = np.array([[9.0, 12.0, 100.0],
+                 [12.0, 12.0, 0.0]])
+
+
+def fig1_problem() -> AllocationProblem:
+    return AllocationProblem(
+        demands=np.array([[1.0, 2.0, 10.0],
+                          [1.0, 2.0, 1.0],
+                          [1.0, 2.0, 0.0]]),
+        capacities=CAPS,
+        weights=np.array([1.0, 1.0, 2.0]),
+    )
+
+
+def fig2_problem() -> AllocationProblem:
+    return AllocationProblem(
+        demands=np.array([[1.5, 1.0, 10.0],
+                          [1.0, 2.0, 10.0],
+                          [0.5, 1.0, 0.0],
+                          [1.0, 0.5, 0.0]]),
+        capacities=CAPS,
+    )
+
+
+class TestGamma:
+    def test_fig1_gamma(self):
+        g = gamma_matrix(fig1_problem())
+        # users 1,2 demand bandwidth -> ineligible on server 2 (c = 0)
+        np.testing.assert_allclose(g, [[6.0, 0.0], [6.0, 0.0], [6.0, 6.0]])
+
+    def test_fig1_tsf_gamma_totals(self):
+        # Paper: gamma_1 = gamma_2 = 6, gamma_3 = 12 tasks
+        gt = gamma_unconstrained_total(fig1_problem())
+        np.testing.assert_allclose(gt, [6.0, 6.0, 12.0])
+
+    def test_fig2_gamma(self):
+        g = gamma_matrix(fig2_problem())
+        np.testing.assert_allclose(g, [[6.0, 0.0], [6.0, 0.0],
+                                       [12.0, 12.0], [9.0, 12.0]])
+
+
+class TestPaperAllocations:
+    def test_fig1_psdsf(self):
+        alloc, info = solve_psdsf_rdm(fig1_problem())
+        assert info.converged
+        np.testing.assert_allclose(alloc.tasks_per_user, [3.0, 3.0, 6.0],
+                                   atol=1e-6)
+        # "6GB is allocated to the first two users and 12GB to the third"
+        np.testing.assert_allclose(alloc.x[:, 0], [3.0, 3.0, 0.0], atol=1e-6)
+        np.testing.assert_allclose(alloc.x[:, 1], [0.0, 0.0, 6.0], atol=1e-6)
+
+    def test_fig1_cdrfh_counterexample(self):
+        alloc = solve_cdrfh(fig1_problem(), num_steps=8000)
+        np.testing.assert_allclose(alloc.tasks_per_user,
+                                   [2.609, 3.130, 6.261], atol=0.02)
+
+    def test_fig1_tsf_counterexample(self):
+        alloc = solve_tsf(fig1_problem(), num_steps=8000)
+        np.testing.assert_allclose(alloc.tasks_per_user, [2.0, 2.0, 8.0],
+                                   atol=0.02)
+
+    def test_fig23_psdsf(self):
+        alloc, info = solve_psdsf_rdm(fig2_problem())
+        assert info.converged
+        np.testing.assert_allclose(alloc.tasks_per_user,
+                                   [3.6, 3.6, 8.0, 8.0], atol=1e-6)
+        # placement: users 1,2 on server 1 only; users 3,4 on server 2 only
+        np.testing.assert_allclose(alloc.x[:, 0], [3.6, 3.6, 0.0, 0.0],
+                                   atol=1e-6)
+        np.testing.assert_allclose(alloc.x[:, 1], [0.0, 0.0, 8.0, 8.0],
+                                   atol=1e-6)
+
+    def test_fig23_vds_values(self):
+        # Section III-A: s_{1,1} = s_{2,1} = 0.6; s_{3,1} = 8/12;
+        # s_{3,2} = s_{4,2} = 8/12
+        alloc, _ = solve_psdsf_rdm(fig2_problem())
+        s = normalized_vds(fig2_problem(), alloc.x)   # phi = 1
+        np.testing.assert_allclose(s[0, 0], 0.6, atol=1e-6)
+        np.testing.assert_allclose(s[1, 0], 0.6, atol=1e-6)
+        np.testing.assert_allclose(s[2, 0], 8 / 12, atol=1e-6)
+        np.testing.assert_allclose(s[2, 1], 8 / 12, atol=1e-6)
+        np.testing.assert_allclose(s[3, 1], 8 / 12, atol=1e-6)
+
+    def test_fig1_algorithm1_literal_matches(self):
+        alloc, info = algorithm1_literal(fig1_problem())
+        assert info.converged
+        np.testing.assert_allclose(alloc.tasks_per_user, [3.0, 3.0, 6.0],
+                                   atol=1e-3)
+
+    def test_fig23_algorithm1_literal_matches(self):
+        alloc, info = algorithm1_literal(fig2_problem())
+        assert info.converged
+        np.testing.assert_allclose(alloc.tasks_per_user,
+                                   [3.6, 3.6, 8.0, 8.0], atol=1e-3)
+
+
+class TestProperties:
+    @pytest.mark.parametrize("prob", [fig1_problem(), fig2_problem()],
+                             ids=["fig1", "fig2"])
+    def test_rdm_properties(self, prob):
+        alloc, _ = solve_psdsf_rdm(prob)
+        for check in (check_feasible_rdm, check_sharing_incentive,
+                      check_envy_freeness, check_bottleneck_structure_rdm):
+            ok, msg = check(alloc)
+            assert ok, f"{check.__name__}: {msg}"
+
+    @pytest.mark.parametrize("prob", [fig1_problem(), fig2_problem()],
+                             ids=["fig1", "fig2"])
+    def test_tdm_properties(self, prob):
+        alloc, info = solve_psdsf_tdm(prob)
+        assert info.converged
+        for check in (check_feasible_tdm, check_sharing_incentive,
+                      check_envy_freeness, check_pareto_tdm):
+            ok, msg = check(alloc)
+            assert ok, f"{check.__name__}: {msg}"
+
+
+class TestReductions:
+    def test_single_server_reduces_to_drf(self):
+        # PS-DSF == DRF when K == 1 (Section I)
+        rng = np.random.default_rng(0)
+        for _ in range(10):
+            n, r = rng.integers(2, 6), rng.integers(1, 4)
+            prob = AllocationProblem(
+                demands=rng.uniform(0.1, 2.0, size=(n, r)),
+                capacities=rng.uniform(5.0, 20.0, size=(1, r)),
+                weights=rng.uniform(0.5, 2.0, size=n),
+            )
+            alloc, info = solve_psdsf_rdm(prob)
+            assert info.converged
+            x_drf = solve_drf_single_pool(prob)
+            np.testing.assert_allclose(alloc.tasks_per_user, x_drf,
+                                       rtol=1e-5, atol=1e-7)
+
+    def test_single_resource_max_min(self):
+        # Single resource fairness: K servers, 1 resource, with constraints
+        prob = AllocationProblem(
+            demands=np.array([[1.0], [2.0], [1.0]]),
+            capacities=np.array([[10.0], [4.0]]),
+            eligibility=np.array([[1, 1], [1, 0], [0, 1]]),
+        )
+        alloc, info = solve_psdsf_rdm(prob)
+        assert info.converged
+        ok, msg = check_feasible_rdm(alloc)
+        assert ok, msg
+        # allocated resource a_n = x_n * d_n ; weighted max-min subject to
+        # eligibility: user 3 can only use server 2 (4 units shared w/ user 1)
+        a = alloc.tasks_per_user * prob.demands[:, 0]
+        assert a.sum() == pytest.approx(14.0, abs=1e-6)   # Pareto: all used
