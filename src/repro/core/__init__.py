@@ -17,3 +17,8 @@ __all__ = [
     "solve_cdrfh", "solve_tsf", "solve_cdrf", "solve_drf_single_pool",
     "uniform_allocation", "DistributedPSDSF",
 ]
+
+# The jitted solver engine (psdsf_solve_jax / psdsf_solve_batched /
+# psdsf_resolve_batched / batch_problems) lives in repro.core.psdsf_jax and
+# is imported from there directly so that numpy-only users never pay the
+# jax import.

@@ -8,6 +8,17 @@ scheduler at scale (10^4 users x 10^3 servers ticks) and by the
 All loops have static bounds: the inner fill runs exactly R+1 saturation
 events; the outer sweep runs ``max_rounds`` with early-exit via
 ``lax.while_loop`` on the residual.
+
+Two entry points:
+
+* ``psdsf_solve_jax`` — one problem, optional ``x0`` warm start (matches the
+  numpy solvers' warm-start contract: same fixed point, fewer rounds).
+* ``psdsf_solve_batched`` — B independent problems (per-cell, per-fault-
+  scenario, per-what-if) solved in one jitted ``vmap`` call. Heterogeneous
+  problem sizes are handled by zero-padding (``batch_problems``): padded
+  users carry ``gamma == 0`` (ineligible everywhere -> x == 0) and padded
+  servers/resources carry zero capacity (saturated at level 0), so padding
+  is exactly inert in the fill.
 """
 from __future__ import annotations
 
@@ -26,27 +37,36 @@ _TOL = 1e-9
 
 def _fill_one_server_rdm(cap, demands, phi, gamma_i, x_ext):
     """Vectorized equivalent of psdsf.server_fill_rdm. All jnp, no Python
-    branching on values. Shapes: cap (R,), demands (N,R), rest (N,)."""
+    branching on values. Shapes: cap (R,), demands (N,R), rest (N,).
+
+    The floors are fixed for the whole fill (they depend only on x_ext), so
+    users are sorted by floor ONCE; the saturation-event loop then only
+    re-masks slopes. Frozen users keep their (zero-slope) breakpoints, which
+    subdivides segments without changing the piecewise-linear usage curves,
+    so every crossing level is still found — just possibly at a later
+    breakpoint index of the same line.
+    """
     n, r_cnt = demands.shape
     eligible = gamma_i > 0
     rate = jnp.where(eligible, phi * gamma_i, 0.0)
     floor = jnp.where(eligible, x_ext / jnp.maximum(rate, 1e-300), _BIG)
+    order = jnp.argsort(floor)
+    f_s = floor[order]                                             # (N,)
+    rt_s = rate[order]
+    dm_s = demands[order]                                          # (N, R)
+    nxt = jnp.concatenate([f_s[1:], jnp.full((1,), _BIG)])[:, None]
 
     def body(_, carry):
-        x_i, active, saturated, frozen_usage, level = carry
+        x_s, active, saturated, frozen_usage, level = carry
         any_active = active.any()
-        rate_a = jnp.where(active, rate, 0.0)
-        floor_a = jnp.where(active, floor, _BIG)
-        order = jnp.argsort(floor_a)
-        f_s = floor_a[order]
-        slope = (demands * rate_a[:, None])[order]                 # (N, R)
+        rate_a = jnp.where(active, rt_s, 0.0)
+        slope = dm_s * rate_a[:, None]                             # (N, R)
         cum_slope = jnp.cumsum(slope, axis=0)
         cum_sf = jnp.cumsum(slope * f_s[:, None], axis=0)
         usage_bp = cum_slope * f_s[:, None] - cum_sf + frozen_usage[None, :]
         # candidate crossing level per (breakpoint k, resource r)
         safe_slope = jnp.maximum(cum_slope, 1e-300)
         cand = f_s[:, None] + (cap[None, :] - usage_bp) / safe_slope
-        nxt = jnp.concatenate([f_s[1:], jnp.full((1,), _BIG)])[:, None]
         valid = (cum_slope > _TOL) & (cand <= nxt + _TOL)
         cand = jnp.where(valid, jnp.maximum(cand, f_s[:, None]), _BIG)
         lr = cand.min(axis=0)                                      # (R,)
@@ -54,24 +74,25 @@ def _fill_one_server_rdm(cap, demands, phi, gamma_i, x_ext):
         best = lr.min()
         best = jnp.maximum(best, level)
         bind = (lr <= best * (1 + 1e-12) + _TOL) & ~saturated
-        new_x = jnp.where(active, rate * jnp.maximum(0.0, best - floor), x_i)
-        newly_frozen = active & ((demands * bind[None, :]).sum(axis=1) > 0)
+        new_x = jnp.where(active, rate_a * jnp.maximum(0.0, best - f_s), x_s)
+        newly_frozen = active & ((dm_s * bind[None, :]).sum(axis=1) > 0)
         new_frozen_usage = frozen_usage + jnp.einsum(
-            "n,nr->r", jnp.where(newly_frozen, new_x, 0.0), demands)
+            "n,nr->r", jnp.where(newly_frozen, new_x, 0.0), dm_s)
         # If nothing is active (or nothing can bind) keep the carry unchanged.
         ok = any_active & (best < _BIG * 0.5)
-        x_i = jnp.where(ok, new_x, x_i)
+        x_s = jnp.where(ok, new_x, x_s)
         frozen_usage = jnp.where(ok, new_frozen_usage, frozen_usage)
         saturated = jnp.where(ok, saturated | bind, saturated)
         active = jnp.where(ok, active & ~newly_frozen, active)
         level = jnp.where(ok, best, level)
-        return x_i, active, saturated, frozen_usage, level
+        return x_s, active, saturated, frozen_usage, level
 
     cap_scale = jnp.maximum(1.0, cap.max())
-    init = (jnp.zeros(n), eligible, cap <= _TOL * cap_scale,
+    elig_s = eligible[order]
+    init = (jnp.zeros(n), elig_s, cap <= _TOL * cap_scale,
             jnp.zeros(r_cnt), 0.0)
-    x_i, *_ = jax.lax.fori_loop(0, r_cnt + 1, body, init)
-    return x_i
+    x_s, *_ = jax.lax.fori_loop(0, r_cnt + 1, body, init)
+    return jnp.zeros(n, x_s.dtype).at[order].set(x_s)
 
 
 def _fill_one_server_tdm(demands, phi, gamma_i, x_ext):
@@ -97,21 +118,33 @@ def _fill_one_server_tdm(demands, phi, gamma_i, x_ext):
     return x
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "max_rounds"))
-def psdsf_solve_jax(demands, capacities, weights, gamma, *,
-                    mode: str = "rdm", max_rounds: int = 256,
-                    tol: float = 1e-6):
-    """Solve PS-DSF. Returns (x (N,K), rounds, residual).
+def _solve_core(demands, capacities, weights, gamma, x0, mode, max_rounds,
+                tol, servers=None, alpha0=1.0):
+    """Traced solver body shared by the single and batched entry points.
 
-    ``gamma`` is the (N, K) eligibility-masked monopolization matrix; compute
-    it with ``repro.core.gamma_matrix`` (or its jnp twin below). Same
-    adaptive damping as the numpy solver (limit-cycle mitigation).
+    All array arguments are positional so ``jax.vmap`` maps over them
+    directly; ``mode``/``max_rounds``/``tol`` close over the trace.
+
+    ``servers`` (optional int32 vector) restricts each sweep to those
+    servers — the incremental/event-driven mode: after churn touches a few
+    cells, only their servers need re-filling, the rest of the fleet keeps
+    its fixed point. Callers restricting the sweep should verify with a full
+    sweep afterwards (``psdsf_resolve_batched`` does).
+
+    The rebuild map has small limit cycles on large instances (the paper
+    leaves sweep convergence open, footnote 5); residuals stall ~0.1% of
+    scale with undamped sweeps. Damping x <- (1-a) x + a rebuild(x) shrinks
+    the cycle amplitude proportionally to ``a``, so the schedule lets ``a``
+    fall to 0.01 (a 100x residual reduction) once the residual stops
+    contracting; exact small instances converge before any damping starts.
     """
-    n, k = gamma.shape
     scale = jnp.maximum(1.0, gamma.max())
+    k = gamma.shape[1]
+    sweep = jnp.arange(k, dtype=jnp.int32) if servers is None else servers
 
     def one_round(x, alpha):
-        def per_server(i, x):
+        def per_server(j, x):
+            i = sweep[j]
             x_ext = x.sum(axis=1) - x[:, i]
             if mode == "rdm":
                 xi = _fill_one_server_rdm(
@@ -120,26 +153,159 @@ def psdsf_solve_jax(demands, capacities, weights, gamma, *,
                 xi = _fill_one_server_tdm(
                     demands, weights, gamma[:, i], x_ext)
             return x.at[:, i].set((1.0 - alpha) * x[:, i] + alpha * xi)
-        return jax.lax.fori_loop(0, k, per_server, x)
+        return jax.lax.fori_loop(0, sweep.shape[0], per_server, x)
 
     def cond(carry):
-        _, rounds, resid, _, _ = carry
+        _, rounds, _, _, resid = carry
         return (rounds < max_rounds) & (resid > tol * scale)
 
     def body(carry):
-        x, rounds, prev_resid, alpha, _ = carry
+        x, rounds, prev_norm, alpha, _ = carry
         x_new = one_round(x, alpha)
         resid = jnp.abs(x_new - x).max()
-        stall = (rounds >= 8) & (resid > 0.98 * prev_resid) & (alpha > 0.15)
+        # Stall detection on the ALPHA-NORMALIZED residual: on a limit cycle
+        # resid ~ alpha * amplitude, so resid/alpha stays flat (shrink every
+        # round of the descent), while true contraction shrinks it (never
+        # damp a converging sweep).
+        norm = resid / alpha
+        stall = (rounds >= 3) & (norm > 0.9 * prev_norm) & (alpha > 0.01)
         alpha = jnp.where(stall, alpha * 0.7, alpha)
-        return x_new, rounds + 1, resid, alpha, resid
+        return x_new, rounds + 1, norm, alpha, resid
 
-    x0 = jnp.zeros((n, k), dtype=jnp.float64 if demands.dtype == jnp.float64
-                   else jnp.float32)
     big = jnp.array(jnp.inf, dtype=x0.dtype)
-    x, rounds, resid, _, _ = jax.lax.while_loop(
-        cond, body, (x0, jnp.array(0), big, jnp.array(1.0, x0.dtype), big))
+    x, rounds, _, _, resid = jax.lax.while_loop(
+        cond, body, (x0, jnp.array(0), big, jnp.array(alpha0, x0.dtype), big))
     return x, rounds, resid
+
+
+def _solve_dtype(demands):
+    return jnp.float64 if demands.dtype == jnp.float64 else jnp.float32
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "max_rounds"))
+def psdsf_solve_jax(demands, capacities, weights, gamma, *, x0=None,
+                    mode: str = "rdm", max_rounds: int = 256,
+                    tol: float = 1e-6):
+    """Solve PS-DSF. Returns (x (N,K), rounds, residual).
+
+    ``gamma`` is the (N, K) eligibility-masked monopolization matrix; compute
+    it with ``repro.core.gamma_matrix`` (or its jnp twin below). Damping
+    uses the alpha-normalized stall schedule of ``_solve_core`` (floor
+    0.01) — deeper than the numpy solver's (floor 0.15), so on
+    limit-cycling instances this solver accepts at ~15x smaller residuals
+    and round counts differ; fixed points agree where they exist.
+
+    ``x0`` (N, K) warm-starts the sweep (e.g. the pre-churn fixed point);
+    the rebuild map's fixed points do not depend on the starting point, so a
+    warm start changes only the round count, not the solution.
+    """
+    n, k = gamma.shape
+    dtype = _solve_dtype(demands)
+    if x0 is None:
+        x0 = jnp.zeros((n, k), dtype=dtype)
+    return _solve_core(demands, capacities, weights, gamma,
+                       x0.astype(dtype), mode, max_rounds, tol)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "max_rounds"))
+def psdsf_solve_batched(demands, capacities, weights, gamma, *, x0=None,
+                        mode: str = "rdm", max_rounds: int = 256,
+                        tol: float = 1e-6):
+    """Solve B independent PS-DSF problems in one jitted call.
+
+    Shapes: demands (B, N, R), capacities (B, K, R), weights (B, N),
+    gamma (B, N, K), optional x0 (B, N, K). Returns (x (B, N, K),
+    rounds (B,), residual (B,)) — per-problem round counts are exact (a
+    converged problem's carry stops updating under the vmapped while_loop).
+
+    Pad heterogeneous problems with ``batch_problems``; padding is inert
+    (see module docstring).
+    """
+    b, n, k = gamma.shape
+    dtype = _solve_dtype(demands)
+    if x0 is None:
+        x0 = jnp.zeros((b, n, k), dtype=dtype)
+    solve = functools.partial(_solve_core, mode=mode, max_rounds=max_rounds,
+                              tol=tol)
+    return jax.vmap(solve)(demands, capacities, weights, gamma,
+                           x0.astype(dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "max_rounds"))
+def psdsf_resolve_batched(demands, capacities, weights, gamma, x0, servers, *,
+                          mode: str = "rdm", max_rounds: int = 64,
+                          tol: float = 1e-4):
+    """Event-driven incremental re-solve of B perturbed problems.
+
+    ``servers`` (B, S) int32 lists the servers each scenario's events touch
+    (degraded servers + every server an arriving/departing user is eligible
+    on; pad rows by repeating any listed index — refilling an unaffected
+    server is idempotent). Phase 1 sweeps only those servers from the warm
+    start ``x0`` (B, N, K); phase 2 self-certifies with full sweeps until
+    the GLOBAL residual passes ``tol``, so a ripple that escapes the
+    restricted set is caught, not silently dropped.
+
+    Returns (x, rounds_restricted, rounds_full, residual); the residual is
+    the full-sweep one. Cost ~ S/K per restricted round, which is where the
+    engine's throughput over cold full solves comes from.
+    """
+    def one(d, c, w, g, x0_, srv):
+        # The warm start is near the fixed point; alpha0 = 0.3 is enough to
+        # absorb a cell-local perturbation in a few sweeps without fully
+        # re-exciting the restricted subproblem's limit cycle.
+        x, r_restricted, _ = _solve_core(d, c, w, g, x0_, mode, max_rounds,
+                                         tol, servers=srv, alpha0=0.3)
+        # Verification starts pre-damped at alpha ~ the level where a cold
+        # solve's own schedule accepts (resid ~ alpha * cycle amplitude
+        # crosses tol around alpha ~ 0.02 at scheduler tolerance), so
+        # incremental and cold solves end with equal-strength certificates;
+        # an undamped full sweep here would just re-excite the limit cycle.
+        x, r_full, resid = _solve_core(d, c, w, g, x, mode, max_rounds, tol,
+                                       alpha0=0.02)
+        return x, r_restricted, r_full, resid
+
+    return jax.vmap(one)(demands, capacities, weights, gamma,
+                         x0.astype(_solve_dtype(demands)), servers)
+
+
+def batch_problems(problems, dtype=np.float32):
+    """Zero-pad a sequence of ``AllocationProblem`` to a common (N, K, R) and
+    stack for ``psdsf_solve_batched``.
+
+    Returns dict with keys demands (B,N,R), capacities (B,K,R), weights
+    (B,N), gamma (B,N,K), sizes [(n_i, k_i)]. Padded users get weight 1 and
+    gamma 0 (never allocated); padded servers/resources get zero capacity.
+    """
+    n_max = max(p.num_users for p in problems)
+    k_max = max(p.num_servers for p in problems)
+    r_max = max(p.num_resources for p in problems)
+    b = len(problems)
+    demands = np.zeros((b, n_max, r_max), dtype)
+    capacities = np.zeros((b, k_max, r_max), dtype)
+    weights = np.ones((b, n_max), dtype)
+    gamma = np.zeros((b, n_max, k_max), dtype)
+    sizes = []
+    for j, p in enumerate(problems):
+        n, k, r = p.num_users, p.num_servers, p.num_resources
+        demands[j, :n, :r] = p.demands
+        capacities[j, :k, :r] = p.capacities
+        weights[j, :n] = p.weights
+        gamma[j, :n, :k] = gamma_matrix(p)
+        sizes.append((n, k))
+    return dict(demands=jnp.asarray(demands),
+                capacities=jnp.asarray(capacities),
+                weights=jnp.asarray(weights), gamma=jnp.asarray(gamma),
+                sizes=sizes)
+
+
+def unbatch_solutions(x, problems):
+    """Slice a padded (B, N, K) solution back into per-problem Allocations."""
+    out = []
+    for j, p in enumerate(problems):
+        out.append(Allocation(
+            p, np.asarray(x[j, :p.num_users, :p.num_servers],
+                          dtype=np.float64)))
+    return out
 
 
 def gamma_matrix_jnp(demands, capacities, eligibility):
@@ -153,22 +319,24 @@ def gamma_matrix_jnp(demands, capacities, eligibility):
     return g * eligibility
 
 
-def solve_psdsf_rdm_jax(problem: AllocationProblem,
+def solve_psdsf_rdm_jax(problem: AllocationProblem, x0=None,
                         max_rounds: int = 64) -> Allocation:
     """Convenience wrapper producing the same container as the numpy solver."""
     g = gamma_matrix(problem)
     x, _, _ = psdsf_solve_jax(
         jnp.asarray(problem.demands), jnp.asarray(problem.capacities),
         jnp.asarray(problem.weights), jnp.asarray(g),
+        x0=None if x0 is None else jnp.asarray(x0),
         mode="rdm", max_rounds=max_rounds)
     return Allocation(problem, np.asarray(x, dtype=np.float64))
 
 
-def solve_psdsf_tdm_jax(problem: AllocationProblem,
+def solve_psdsf_tdm_jax(problem: AllocationProblem, x0=None,
                         max_rounds: int = 64) -> Allocation:
     g = gamma_matrix(problem)
     x, _, _ = psdsf_solve_jax(
         jnp.asarray(problem.demands), jnp.asarray(problem.capacities),
         jnp.asarray(problem.weights), jnp.asarray(g),
+        x0=None if x0 is None else jnp.asarray(x0),
         mode="tdm", max_rounds=max_rounds)
     return Allocation(problem, np.asarray(x, dtype=np.float64))

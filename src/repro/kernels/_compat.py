@@ -1,0 +1,12 @@
+"""jax version compatibility shims shared by the Pallas kernels.
+
+``pallas.tpu`` renamed ``TPUCompilerParams`` to ``CompilerParams`` across
+jax releases; resolve whichever this jax ships so the kernels (and their
+interpret-mode CI runs) work on both sides of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

@@ -1,3 +1,5 @@
+from .churn import (ChurnEvent, ChurnRecord, ChurnSimulator,
+                    poisson_churn_events)
 from .cluster import (Cluster, TenantJob, TPUPod, job_from_artifact,
                       schedule, schedule_detail)
 from .serving import (DynamicDispatcher, ReplicaGroup, Tenant,

@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro.configs import ARCH_IDS, get_smoke_config
 from repro.models import (forward_decode, forward_prefill, forward_train,
                           init_caches, init_params)

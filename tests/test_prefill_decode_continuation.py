@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro.configs import get_smoke_config
 from repro.models import forward_decode, forward_prefill, init_params
 from repro.models.blocks import stack_train

@@ -7,6 +7,10 @@ freeness, Theorem-1 bottleneck structure (RDM), Theorem-2/Pareto fixed point
 """
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install "
+    "-e .[test]); the CI fast lane installs it")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (AllocationProblem, solve_psdsf_rdm, solve_psdsf_tdm,
