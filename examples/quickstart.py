@@ -22,8 +22,8 @@ problem = AllocationProblem(
 
 alloc, info = solve_psdsf_rdm(problem)
 print("PS-DSF tasks/user:", alloc.tasks_per_user, f"(converged in {info.rounds} rounds)")
-print("TSF   tasks/user:", solve_tsf(problem).tasks_per_user)
-print("C-DRFH tasks/user:", solve_cdrfh(problem).tasks_per_user)
+print("TSF   tasks/user:", solve_tsf(problem)[0].tasks_per_user)
+print("C-DRFH tasks/user:", solve_cdrfh(problem)[0].tasks_per_user)
 print("-> PS-DSF gives the bottleneck-fair (3, 3, 6); the baselines do not.\n")
 
 # --- end-to-end training through the framework -------------------------------

@@ -1,11 +1,17 @@
-"""PS-DSF core: the paper's allocation mechanism and its baselines."""
+"""PS-DSF core: the paper's allocation mechanism, its baselines, and the
+unified allocator registry (``engine``)."""
 from .types import Allocation, AllocationProblem
 from .gamma import (dominant_resource, gamma_constrained_total, gamma_matrix,
                     gamma_unconstrained_total, normalized_vds, vds)
 from .psdsf import (algorithm1_literal, server_fill_rdm, server_fill_tdm,
-                    solve_psdsf_rdm, solve_psdsf_tdm, SolveInfo)
-from .baselines import (solve_cdrf, solve_cdrfh, solve_drf_single_pool,
-                        solve_tsf, uniform_allocation)
+                    solve_psdsf_rdm, solve_psdsf_tdm, sweep_fixed_point,
+                    SolveInfo)
+from .baselines import (level_rate_matrix, score_weights, solve_cdrf,
+                        solve_cdrfh, solve_drf_pooled, solve_drf_single_pool,
+                        solve_level_fill, solve_tsf, uniform_allocation)
+from .engine import (Allocator, ConvergenceError, ensure_converged,
+                     get_allocator, list_allocators, register_allocator,
+                     solve)
 from .dynamic import DistributedPSDSF
 
 __all__ = [
@@ -13,12 +19,15 @@ __all__ = [
     "gamma_matrix", "dominant_resource", "vds", "normalized_vds",
     "gamma_unconstrained_total", "gamma_constrained_total",
     "solve_psdsf_rdm", "solve_psdsf_tdm", "algorithm1_literal",
-    "server_fill_rdm", "server_fill_tdm",
+    "server_fill_rdm", "server_fill_tdm", "sweep_fixed_point",
     "solve_cdrfh", "solve_tsf", "solve_cdrf", "solve_drf_single_pool",
-    "uniform_allocation", "DistributedPSDSF",
+    "solve_drf_pooled", "solve_level_fill", "level_rate_matrix",
+    "score_weights", "uniform_allocation", "DistributedPSDSF",
+    "Allocator", "ConvergenceError", "ensure_converged", "get_allocator",
+    "list_allocators", "register_allocator", "solve",
 ]
 
 # The jitted solver engine (psdsf_solve_jax / psdsf_solve_batched /
-# psdsf_resolve_batched / batch_problems) lives in repro.core.psdsf_jax and
-# is imported from there directly so that numpy-only users never pay the
-# jax import.
+# psdsf_resolve_batched / batch_problems) lives in repro.core.psdsf_jax, and
+# the jitted baseline twin in repro.core.baselines_jax; both are imported
+# from there directly so that numpy-only users never pay the jax import.

@@ -2,25 +2,51 @@
 
 All global-share mechanisms (DRF-on-a-pool, C-DRFH, TSF, CDRF) are instances
 of one progressive filler: every user n has a *level* x_n / (phi_n w_n) for a
-mechanism-specific score weight w_n, and the filler raises the minimum level,
-placing marginal tasks greedily on the eligible server with most headroom
-(best-fit spill — reproduces the paper's worked examples in Section II-B).
+mechanism-specific score weight w_n, and the filler raises the minimum level
+subject to placement feasibility.
 
   C-DRFH:  w_n = 1 / max_r d[n,r] / (sum_i c[i,r])   (constraint-oblivious
            global dominant share, Eq. 5 with pooled capacities)
   TSF:     w_n = gamma_n ignoring placement constraints [14]
   CDRF:    w_n = gamma_n honoring placement constraints [4]
   DRF:     single pooled server (no placement), the original NSDI'11 mechanism
+
+The filler is EXACT and event-driven: a weighted max-min fill with a
+server-independent level rate is the same fixed-point problem as PS-DSF's
+server procedure with ``gamma[n, i]`` replaced by ``w_n`` on eligible
+servers, so we reuse ``server_fill_rdm`` (piecewise-linear usage curves,
+saturation events) and the shared Gauss-Seidel ``sweep_fixed_point``. The
+fixed point reproduces the paper's Section II-B worked examples to 1e-6
+(Fig. 1: TSF (2, 2, 8); C-DRFH (60/23, 72/23, 144/23)); the historical
+epsilon-increment simulation with its O(1/num_steps) error — and its
+``num_steps`` knob — is retained only as ``_epsilon_level_fill_reference``
+for golden-parity tests and the speed benchmark.
+
+Placement semantics: per-server progressive fills — the same placement
+engine PS-DSF itself uses, so cross-mechanism comparisons are
+apples-to-apples. Like PS-DSF under RDM (which the paper notes is not
+Pareto optimal), the per-server fixed point does not model coordinated
+cross-server reshuffles; off the worked examples its common level can sit a
+few percent below the legacy greedy filler's (see the fig2/google-cluster
+placement-band tests for the pinned gaps).
+
+The jitted/vmapped twin of this filler lives in ``baselines_jax``; the
+mechanism registry exposing all of these behind one interface lives in
+``engine``.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import numpy as np
 
 from .gamma import (gamma_constrained_total, gamma_matrix,
                     gamma_unconstrained_total)
+from .psdsf import SolveInfo, server_fill_rdm, sweep_fixed_point
 from .types import Allocation, AllocationProblem
 
-_TOL = 1e-9
+#: mechanisms expressible as a score-weighted level fill (see module docstring)
+LEVEL_FILL_MECHANISMS = ("cdrfh", "tsf", "cdrf")
 
 
 def uniform_allocation(problem: AllocationProblem) -> Allocation:
@@ -31,18 +57,174 @@ def uniform_allocation(problem: AllocationProblem) -> Allocation:
     return Allocation(problem, g * share[:, None])
 
 
-def _greedy_level_fill(
+def score_weights(problem: AllocationProblem, mechanism: str) -> np.ndarray:
+    """The per-user score weight w_n defining each baseline's level."""
+    if mechanism == "cdrfh":
+        pooled = problem.capacities.sum(axis=0)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            maxd = np.max(
+                np.where(problem.demands > 0,
+                         problem.demands / np.maximum(pooled[None, :], 1e-300),
+                         0.0), axis=1)
+        return np.where(maxd > 0, 1.0 / np.maximum(maxd, 1e-300), 0.0)
+    if mechanism == "tsf":
+        return gamma_unconstrained_total(problem)
+    if mechanism == "cdrf":
+        return gamma_constrained_total(problem)
+    raise ValueError(f"unknown level-fill mechanism {mechanism!r}; "
+                     f"expected one of {LEVEL_FILL_MECHANISMS}")
+
+
+def level_rate_matrix(problem: AllocationProblem, mechanism: str,
+                      gamma: Optional[np.ndarray] = None) -> np.ndarray:
+    """(N, K) level-rate matrix for the baseline fill: w_n on every server
+    the user can actually run on (explicit delta AND implicit capacity-zero
+    ineligibility, both folded into gamma == 0), else 0. This is the exact
+    analogue of PS-DSF's gamma matrix with the per-server normalization
+    replaced by the mechanism's global score weight. Pass a precomputed
+    ``gamma_matrix(problem)`` to avoid recomputing the O(NKR) reduction."""
+    w = score_weights(problem, mechanism)
+    g = gamma_matrix(problem) if gamma is None else gamma
+    return np.where(g > 0, w[:, None], 0.0)
+
+
+def solve_level_fill(
+    problem: AllocationProblem,
+    level_gamma: np.ndarray,
+    x0: Optional[np.ndarray] = None,
+    max_rounds: int = 600,
+    tol: float = 1e-8,
+    loose_tol: float = 5e-3,
+    adaptive_damping: bool = True,
+    scale: Optional[float] = None,
+) -> tuple[Allocation, SolveInfo]:
+    """Exact weighted max-min level fill with placement.
+
+    ``level_gamma[n, i]`` is the rate (tasks per unit level) at which user n
+    fills on server i while unfrozen — ``w_n`` masked by eligibility for the
+    baselines. Event-driven per-server fills (saturation events, no epsilon
+    steps) swept to a fixed point; same convergence/residual contract as the
+    PS-DSF solvers. The acceptance band is scaled by the PER-SERVER
+    monopolization scale (``gamma_matrix(problem).max()``, an allocation
+    magnitude), NOT by ``level_gamma`` — the score weights sum gamma over
+    servers, so using them would loosen the band ~linearly with K.
+    """
+
+    def fill(i, x_ext):
+        return server_fill_rdm(problem.capacities[i], problem.demands,
+                               problem.weights, level_gamma[:, i], x_ext)
+
+    if scale is None:
+        scale = gamma_matrix(problem).max(initial=1.0)
+    x, info = sweep_fixed_point(
+        fill, problem.num_users, problem.num_servers, scale, x0=x0,
+        max_rounds=max_rounds, tol=tol, loose_tol=loose_tol,
+        adaptive_damping=adaptive_damping)
+    return Allocation(problem, x), info
+
+
+def _solve_baseline(problem: AllocationProblem, mechanism: str,
+                    **kw) -> tuple[Allocation, SolveInfo]:
+    g = gamma_matrix(problem)    # computed once: level rates AND scale
+    return solve_level_fill(problem,
+                            level_rate_matrix(problem, mechanism, gamma=g),
+                            scale=g.max(initial=1.0), **kw)
+
+
+def solve_cdrfh(problem: AllocationProblem,
+                **kw) -> tuple[Allocation, SolveInfo]:
+    """C-DRFH: strategy-proof DRFH extension that ignores constraints when
+    identifying the dominant resource (Section II-B). Exact."""
+    return _solve_baseline(problem, "cdrfh", **kw)
+
+
+def solve_tsf(problem: AllocationProblem,
+              **kw) -> tuple[Allocation, SolveInfo]:
+    """TSF [14]: max-min on x_n / gamma_n, gamma_n constraint-oblivious.
+    Exact."""
+    return _solve_baseline(problem, "tsf", **kw)
+
+
+def solve_cdrf(problem: AllocationProblem,
+               **kw) -> tuple[Allocation, SolveInfo]:
+    """CDRF [4]: max-min on x_n / gamma_n, gamma honoring constraints.
+    Exact."""
+    return _solve_baseline(problem, "cdrf", **kw)
+
+
+def solve_drf_single_pool(problem: AllocationProblem) -> np.ndarray:
+    """Original DRF on the pooled capacities (no placement constraints).
+
+    Exact progressive filling (event-driven): all users share one server whose
+    capacity is sum_i c_i. Returns x_n (N,). Used for single-server instances
+    (PS-DSF must reduce to DRF there) and property references.
+    """
+    d = problem.demands
+    cap = problem.capacities.sum(axis=0)
+    phi = problem.weights
+    n, r_cnt = d.shape
+    with np.errstate(divide="ignore", invalid="ignore"):
+        maxd = np.max(d / np.maximum(cap[None, :], 1e-300), axis=1)
+    rate = phi / np.maximum(maxd, 1e-300)          # dx/dL, L = dominant share/phi
+    active = np.ones(n, dtype=bool)
+    x = np.zeros(n)
+    usage = np.zeros(r_cnt)
+    level = 0.0
+    for _ in range(r_cnt + 1):
+        if not active.any():
+            break
+        slopes = np.einsum("n,nr->r", rate * active, d)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            lr = np.where(slopes > 1e-300, (cap - usage) / slopes, np.inf)
+        r_star = int(np.argmin(lr))
+        dl = lr[r_star]
+        if not np.isfinite(dl):
+            break
+        x = x + rate * active * dl
+        usage = usage + slopes * dl
+        level += dl
+        sat = lr <= lr[r_star] + 1e-9
+        newly = active & (d[:, sat].sum(axis=1) > 0)
+        active &= ~newly
+    return x
+
+
+def pooled_problem(problem: AllocationProblem) -> AllocationProblem:
+    """The single-server full-substitutability relaxation DRF solves on."""
+    return AllocationProblem(
+        demands=problem.demands,
+        capacities=problem.capacities.sum(axis=0, keepdims=True),
+        weights=problem.weights)
+
+
+def solve_drf_pooled(problem: AllocationProblem
+                     ) -> tuple[Allocation, SolveInfo]:
+    """Classic DRF on the pooled cluster, in the unified allocator contract.
+
+    DRF assumes resources are fully substitutable across servers, so the
+    returned ``Allocation`` lives on the POOLED relaxation problem (one
+    virtual server, x shape (N, 1)) — an optimistic upper bound that ignores
+    placement; per-user totals are exact and event-driven.
+    """
+    pooled = pooled_problem(problem)
+    x = solve_drf_single_pool(problem)
+    return Allocation(pooled, x[:, None]), SolveInfo(1, True, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Legacy epsilon-increment filler — golden-parity reference ONLY
+# ---------------------------------------------------------------------------
+
+def _epsilon_level_fill_reference(
     problem: AllocationProblem,
     score_weight: np.ndarray,      # (N,) w_n; level_n = x_n / (phi_n w_n)
     num_steps: int = 4000,
 ) -> np.ndarray:
-    """Weighted max-min on levels with greedy best-fit placement.
-
-    epsilon-increment simulation: each step advances every user currently at
-    the minimum level by d_level = horizon/num_steps, placing tasks on the
-    eligible server with the largest per-task headroom. Users freeze when no
-    eligible server has room. Exact enough for the paper's examples at the
-    default resolution (error O(1/num_steps)).
+    """The pre-engine baseline filler: epsilon-increment simulation with
+    greedy best-fit placement and O(1/num_steps) error. Retained (not
+    exported) solely so golden-parity tests and the ``mechanism_comparison``
+    speed benchmark can compare the exact event-driven filler against what
+    the repo used to compute. Do not use for new work.
     """
     d = problem.demands
     cap = problem.capacities.copy()
@@ -95,64 +277,4 @@ def _greedy_level_fill(
                 progressed = True
         if not progressed:
             break
-    return x
-
-
-def solve_cdrfh(problem: AllocationProblem, num_steps: int = 4000) -> Allocation:
-    """C-DRFH: strategy-proof DRFH extension that ignores constraints when
-    identifying the dominant resource (Section II-B)."""
-    pooled = problem.capacities.sum(axis=0)
-    with np.errstate(divide="ignore", invalid="ignore"):
-        maxd = np.max(problem.demands / np.maximum(pooled[None, :], 1e-300),
-                      axis=1)
-    w = np.where(maxd > 0, 1.0 / np.maximum(maxd, 1e-300), 0.0)
-    return Allocation(problem, _greedy_level_fill(problem, w, num_steps))
-
-
-def solve_tsf(problem: AllocationProblem, num_steps: int = 4000) -> Allocation:
-    """TSF [14]: max-min on x_n / gamma_n with gamma_n constraint-oblivious."""
-    w = gamma_unconstrained_total(problem)
-    return Allocation(problem, _greedy_level_fill(problem, w, num_steps))
-
-
-def solve_cdrf(problem: AllocationProblem, num_steps: int = 4000) -> Allocation:
-    """CDRF [4]: max-min on x_n / gamma_n, gamma honoring constraints."""
-    w = gamma_constrained_total(problem)
-    return Allocation(problem, _greedy_level_fill(problem, w, num_steps))
-
-
-def solve_drf_single_pool(problem: AllocationProblem) -> np.ndarray:
-    """Original DRF on the pooled capacities (no placement constraints).
-
-    Exact progressive filling (event-driven): all users share one server whose
-    capacity is sum_i c_i. Returns x_n (N,). Used for single-server instances
-    (PS-DSF must reduce to DRF there) and property references.
-    """
-    d = problem.demands
-    cap = problem.capacities.sum(axis=0)
-    phi = problem.weights
-    n, r_cnt = d.shape
-    with np.errstate(divide="ignore", invalid="ignore"):
-        maxd = np.max(d / np.maximum(cap[None, :], 1e-300), axis=1)
-    rate = phi / np.maximum(maxd, 1e-300)          # dx/dL, L = dominant share/phi
-    active = np.ones(n, dtype=bool)
-    x = np.zeros(n)
-    usage = np.zeros(r_cnt)
-    level = 0.0
-    for _ in range(r_cnt + 1):
-        if not active.any():
-            break
-        slopes = np.einsum("n,nr->r", rate * active, d)
-        with np.errstate(divide="ignore", invalid="ignore"):
-            lr = np.where(slopes > 1e-300, (cap - usage) / slopes, np.inf)
-        r_star = int(np.argmin(lr))
-        dl = lr[r_star]
-        if not np.isfinite(dl):
-            break
-        x = x + rate * active * dl
-        usage = usage + slopes * dl
-        level += dl
-        sat = lr <= lr[r_star] + _TOL
-        newly = active & (d[:, sat].sum(axis=1) > 0)
-        active &= ~newly
     return x

@@ -1,0 +1,134 @@
+"""Jitted, vectorized twin of the exact baseline fillers (``baselines.py``).
+
+A baseline (C-DRFH / TSF / CDRF) is a weighted max-min level fill whose level
+rate is a server-independent score weight ``w_n`` on eligible servers — the
+same per-server saturation-event fill and Gauss-Seidel sweep as PS-DSF with
+``gamma[n, i]`` replaced by the (N, K) *level-rate matrix*. The solver body
+is therefore shared verbatim with the PS-DSF engine (``psdsf_jax._solve_core``
+in RDM mode); this module contributes the jnp level-rate construction plus
+jitted single / vmapped-batched entry points mirroring ``psdsf_solve_jax`` /
+``psdsf_solve_batched``, so baselines participate in batched scenario sweeps
+at the same 10^3-user scales.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .baselines import LEVEL_FILL_MECHANISMS, level_rate_matrix
+from .psdsf import SolveInfo
+from .psdsf_jax import _BIG, _solve_core, _solve_dtype, gamma_matrix_jnp
+from .types import Allocation, AllocationProblem
+
+
+def level_rate_matrix_jnp(demands, capacities, eligibility, mechanism: str):
+    """jnp twin of ``baselines.level_rate_matrix`` (for jitted pipelines).
+
+    Shapes: demands (N, R), capacities (K, R), eligibility (N, K).
+    """
+    g = gamma_matrix_jnp(demands, capacities, eligibility)
+    if mechanism == "cdrfh":
+        pooled = capacities.sum(axis=0)
+        frac = jnp.where(demands > 0,
+                         jnp.where(pooled[None, :] > 0,
+                                   demands / jnp.maximum(pooled[None, :],
+                                                         1e-300), _BIG),
+                         0.0)
+        maxd = frac.max(axis=1)
+        w = jnp.where(maxd > 0, 1.0 / jnp.maximum(maxd, 1e-300), 0.0)
+    elif mechanism == "tsf":
+        g_unc = gamma_matrix_jnp(demands, capacities,
+                                 jnp.ones_like(eligibility))
+        w = g_unc.sum(axis=1)
+    elif mechanism == "cdrf":
+        w = g.sum(axis=1)
+    else:
+        raise ValueError(f"unknown level-fill mechanism {mechanism!r}; "
+                         f"expected one of {LEVEL_FILL_MECHANISMS}")
+    return jnp.where(g > 0, w[:, None], 0.0)
+
+
+def _gamma_scale(demands, capacities, level_gamma):
+    """Per-server monopolization scale for the acceptance band: the level
+    rates sum gamma over servers, so scaling the residual tolerance by
+    ``level_gamma.max()`` would loosen it ~linearly with K."""
+    g = gamma_matrix_jnp(demands, capacities,
+                         (level_gamma > 0).astype(demands.dtype))
+    return g.max()
+
+
+@functools.partial(jax.jit, static_argnames=("max_rounds",))
+def baseline_solve_jax(demands, capacities, weights, level_gamma, *, x0=None,
+                       max_rounds: int = 256, tol: float = 1e-6):
+    """Solve one exact baseline fill. Returns (x (N,K), rounds, residual).
+
+    ``level_gamma`` is the (N, K) level-rate matrix from
+    ``level_rate_matrix`` / ``level_rate_matrix_jnp``. Warm-startable via
+    ``x0`` exactly like ``psdsf_solve_jax``.
+    """
+    n, k = level_gamma.shape
+    dtype = _solve_dtype(demands)
+    if x0 is None:
+        x0 = jnp.zeros((n, k), dtype=dtype)
+    return _solve_core(demands, capacities, weights, level_gamma,
+                       x0.astype(dtype), "rdm", max_rounds, tol,
+                       scale=_gamma_scale(demands, capacities, level_gamma))
+
+
+@functools.partial(jax.jit, static_argnames=("max_rounds",))
+def baseline_solve_batched(demands, capacities, weights, level_gamma, *,
+                           x0=None, max_rounds: int = 256, tol: float = 1e-6):
+    """Solve B independent baseline fills in one jitted vmap call.
+
+    Shapes as ``psdsf_solve_batched``: demands (B, N, R), capacities
+    (B, K, R), weights (B, N), level_gamma (B, N, K), optional x0 (B, N, K).
+    Pad heterogeneous problems with ``psdsf_jax.batch_problems`` (padding is
+    inert: padded users carry level rate 0, padded servers zero capacity).
+    """
+    b, n, k = level_gamma.shape
+    dtype = _solve_dtype(demands)
+    if x0 is None:
+        x0 = jnp.zeros((b, n, k), dtype=dtype)
+
+    def solve(d, c, w, lg, x0_):
+        return _solve_core(d, c, w, lg, x0_, "rdm", max_rounds, tol,
+                           scale=_gamma_scale(d, c, lg))
+
+    return jax.vmap(solve)(demands, capacities, weights, level_gamma,
+                           x0.astype(dtype))
+
+
+def batch_level_rates(problems, mechanism: str, dtype=np.float32):
+    """Zero-pad per-problem level-rate matrices to a common (N, K) and stack
+    — the ``gamma`` companion of ``psdsf_jax.batch_problems`` for feeding
+    ``baseline_solve_batched`` (padding is inert: rate 0 never fills)."""
+    n_max = max(p.num_users for p in problems)
+    k_max = max(p.num_servers for p in problems)
+    lg = np.zeros((len(problems), n_max, k_max), dtype)
+    for j, p in enumerate(problems):
+        lg[j, :p.num_users, :p.num_servers] = level_rate_matrix(p, mechanism)
+    return jnp.asarray(lg)
+
+
+def solve_baseline_jax(problem: AllocationProblem, mechanism: str, x0=None,
+                       max_rounds: int = 256, tol: float = 1e-6,
+                       loose_tol: float = 5e-3
+                       ) -> tuple[Allocation, SolveInfo]:
+    """Convenience wrapper with the same container/contract as the numpy
+    baseline solvers (``solve_tsf`` & co.)."""
+    from .gamma import gamma_matrix
+
+    g = gamma_matrix(problem)    # computed once: level rates AND scale
+    lg = level_rate_matrix(problem, mechanism, gamma=g)
+    x, rounds, resid = baseline_solve_jax(
+        jnp.asarray(problem.demands), jnp.asarray(problem.capacities),
+        jnp.asarray(problem.weights), jnp.asarray(lg),
+        x0=None if x0 is None else jnp.asarray(x0), max_rounds=max_rounds,
+        tol=tol)
+    return (Allocation(problem, np.asarray(x, dtype=np.float64)),
+            SolveInfo.from_residual(int(rounds), float(resid),
+                                    float(g.max(initial=1.0)), tol,
+                                    loose_tol))

@@ -122,15 +122,20 @@ class DistributedPSDSF:
         if self.engine == "jax":
             self._tick_with_jax(np.asarray(list(idx), dtype=np.int32))
             return
+        # Row sums feeding the external floors are maintained incrementally:
+        # one O(NK) reduction per tick, O(N) updates per server after that.
+        xsum = self.x.sum(axis=1)
         for i in idx:
             gamma_i = np.where(self.active, self.gamma[:, i], 0.0)
-            x_ext = self.x.sum(axis=1) - self.x[:, i]
+            x_ext = xsum - self.x[:, i]
             if self.mode == "rdm":
-                self.x[:, i] = server_fill_rdm(
+                xi = server_fill_rdm(
                     p.capacities[i], p.demands, p.weights, gamma_i, x_ext)
             else:
-                self.x[:, i] = server_fill_tdm(
+                xi = server_fill_tdm(
                     p.demands, p.weights, gamma_i, x_ext)
+            xsum += xi - self.x[:, i]
+            self.x[:, i] = xi
 
     def _tick_with_jax(self, servers: np.ndarray) -> None:
         import jax.numpy as jnp

@@ -1,0 +1,150 @@
+"""Unified allocator engine: one registry, one convergence contract.
+
+Every mechanism the repo implements — PS-DSF (both feasibility regimes), the
+paper's Section II baselines, and the uniform reference point — is exposed
+behind one interface::
+
+    alloc, info = get_allocator("tsf")(problem)
+
+An allocator is any callable ``(AllocationProblem, **kw) -> (Allocation,
+SolveInfo)``. The ``SolveInfo`` contract is uniform across mechanisms:
+``converged`` is True when the residual passed the solver's tight tolerance
+OR the loose scheduler tolerance (``approx=True`` in the latter case —
+exactly the jax engine's acceptance level); residuals are always reported,
+never assumed. ``ensure_converged`` is the shared residual-tolerance check
+the scheduling layers use instead of bare asserts.
+
+Registered mechanisms:
+
+  psdsf-rdm   PS-DSF, resource-division multiplexing (the paper's default)
+  psdsf-tdm   PS-DSF, time-division multiplexing (Eq. 10 feasibility)
+  drf         classic DRF on the pooled cluster — the full-substitutability
+              relaxation; the returned Allocation lives on the POOLED
+              problem (x shape (N, 1)), see ``baselines.solve_drf_pooled``
+  cdrfh       constrained DRFH (exact event-driven level fill)
+  tsf         task-share fairness [14] (exact)
+  cdrf        constrained DRF [4] (exact)
+  uniform     phi-proportional share of every server (closed form)
+
+``solve(problem, mechanism, backend="numpy"|"jax")`` additionally routes the
+sweep-based mechanisms through the jitted engine (``psdsf_jax`` /
+``baselines_jax``) — same fixed points, 10^3-user scales; closed-form
+mechanisms (drf, uniform) ignore the backend.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Protocol, Tuple
+
+from .baselines import (solve_cdrf, solve_cdrfh, solve_drf_pooled, solve_tsf,
+                        uniform_allocation)
+from .psdsf import SolveInfo, solve_psdsf_rdm, solve_psdsf_tdm
+from .types import Allocation, AllocationProblem
+
+
+class ConvergenceError(RuntimeError):
+    """A solve ended outside even the loose acceptance tolerance."""
+
+
+class Allocator(Protocol):
+    def __call__(self, problem: AllocationProblem, **kw
+                 ) -> Tuple[Allocation, SolveInfo]: ...
+
+
+_REGISTRY: Dict[str, Allocator] = {}
+
+#: mechanisms realized as Gauss-Seidel sweeps of per-server fills — these
+#: run on the jitted jax backend and can tick through the churn simulator
+#: (drf/uniform are closed-form: nothing to sweep or warm-start)
+SWEEP_MECHANISMS = ("psdsf-rdm", "psdsf-tdm", "cdrfh", "tsf", "cdrf")
+
+
+def register_allocator(name: str) -> Callable[[Allocator], Allocator]:
+    def deco(fn: Allocator) -> Allocator:
+        if name in _REGISTRY:
+            raise ValueError(f"allocator {name!r} already registered")
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_allocator(name: str) -> Allocator:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown allocator {name!r}; registered: "
+                       f"{', '.join(sorted(_REGISTRY))}") from None
+
+
+def list_allocators() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def ensure_converged(info: SolveInfo, what: str = "allocator") -> SolveInfo:
+    """Shared acceptance check for scheduling layers.
+
+    Accepts tight or loose (``approx``) convergence — the same level the jax
+    engine certifies at — and raises ``ConvergenceError`` (never a stripped
+    ``assert``) otherwise, with the residual in the message.
+    """
+    if not info.converged:
+        raise ConvergenceError(
+            f"{what}: residual {info.residual:.3e} after {info.rounds} "
+            f"rounds exceeds the loose acceptance tolerance")
+    return info
+
+
+register_allocator("psdsf-rdm")(solve_psdsf_rdm)
+register_allocator("psdsf-tdm")(solve_psdsf_tdm)
+register_allocator("cdrfh")(solve_cdrfh)
+register_allocator("tsf")(solve_tsf)
+register_allocator("cdrf")(solve_cdrf)
+
+
+@register_allocator("drf")
+def _drf(problem: AllocationProblem, **kw) -> Tuple[Allocation, SolveInfo]:
+    # closed form: sweep kwargs (tol, max_rounds, ...) have nothing to
+    # control, but the Allocator contract accepts them so callers can sweep
+    # mechanisms with shared solver options
+    return solve_drf_pooled(problem)
+
+
+@register_allocator("uniform")
+def _uniform(problem: AllocationProblem, **kw
+             ) -> Tuple[Allocation, SolveInfo]:
+    return uniform_allocation(problem), SolveInfo(1, True, 0.0)
+
+
+def solve(problem: AllocationProblem, mechanism: str = "psdsf-rdm",
+          backend: str = "numpy", **kw) -> Tuple[Allocation, SolveInfo]:
+    """One-call entry point: registry lookup + optional jitted backend."""
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"backend must be 'numpy' or 'jax': {backend!r}")
+    if backend == "jax" and mechanism in SWEEP_MECHANISMS:
+        if mechanism in ("psdsf-rdm", "psdsf-tdm"):
+            return _solve_psdsf_via_jax(problem, mechanism, **kw)
+        from .baselines_jax import solve_baseline_jax
+        return solve_baseline_jax(problem, mechanism, **kw)
+    return get_allocator(mechanism)(problem, **kw)
+
+
+def _solve_psdsf_via_jax(problem: AllocationProblem, mechanism: str, x0=None,
+                         max_rounds: int = 256, tol: float = 1e-6,
+                         loose_tol: float = 5e-3
+                         ) -> Tuple[Allocation, SolveInfo]:
+    import jax.numpy as jnp
+    import numpy as np
+
+    from .gamma import gamma_matrix
+    from .psdsf_jax import psdsf_solve_jax
+
+    g = gamma_matrix(problem)
+    x, rounds, resid = psdsf_solve_jax(
+        jnp.asarray(problem.demands), jnp.asarray(problem.capacities),
+        jnp.asarray(problem.weights), jnp.asarray(g),
+        x0=None if x0 is None else jnp.asarray(x0),
+        mode="rdm" if mechanism == "psdsf-rdm" else "tdm",
+        max_rounds=max_rounds, tol=tol)
+    return (Allocation(problem, np.asarray(x, dtype=np.float64)),
+            SolveInfo.from_residual(int(rounds), float(resid),
+                                    float(g.max(initial=1.0)), tol,
+                                    loose_tol))

@@ -178,6 +178,72 @@ class SolveInfo:
     residual: float
     approx: bool = False     # converged only to the loose tolerance
 
+    @classmethod
+    def from_residual(cls, rounds: int, residual: float, scale: float,
+                      tol: float, loose_tol: float = 5e-3) -> "SolveInfo":
+        """The acceptance contract applied to a raw (rounds, residual) pair
+        — the single place the tight/loose bands are derived, shared by the
+        jitted solver wrappers so the psdsf and baseline paths cannot
+        drift."""
+        scale = max(1.0, scale)
+        converged = residual <= tol * scale
+        approx = not converged and residual <= loose_tol * scale
+        return cls(rounds, converged or approx, residual, approx=approx)
+
+
+def sweep_fixed_point(
+    fill_server,             # (i, x_ext) -> x_i (N,), the per-server rebuild
+    num_users: int,
+    num_servers: int,
+    scale: float,
+    x0: Optional[np.ndarray] = None,
+    max_rounds: int = 600,
+    tol: float = 1e-8,
+    loose_tol: float = 5e-3,
+    adaptive_damping: bool = True,
+) -> tuple[np.ndarray, SolveInfo]:
+    """Gauss-Seidel sweep of per-server rebuilds to a fixed point.
+
+    The shared outer loop behind every progressive-fill mechanism in the
+    repo: PS-DSF RDM/TDM (levels normalized by the per-server gamma) and the
+    exact baselines (levels normalized by a server-independent score weight).
+
+    Convergence of the iterated server procedure is an OPEN question the
+    paper defers to future work (footnote 5). Empirically: every instance in
+    the paper converges exactly in <= 5 rounds; large adversarial random
+    instances can enter small limit cycles (~0.3% of gamma-scale). We
+    mitigate with adaptive damping (x <- (1-a) x + a rebuild(x), shrinking a
+    when the residual stalls) and report ``approx=True`` when only the loose
+    tolerance (default 0.5% of scale) is met — immaterial for scheduling but
+    recorded honestly. The row sums feeding each fill's external floors are
+    maintained incrementally (one O(NK) reduction per round, not per server).
+    """
+    n, k = num_users, num_servers
+    x = np.zeros((n, k)) if x0 is None else np.array(x0, dtype=np.float64)
+    scale = max(1.0, scale)
+    resid = np.inf
+    prev_resid = np.inf
+    alpha = 1.0
+    for rounds in range(1, max_rounds + 1):
+        x_prev = x.copy()
+        xsum = x.sum(axis=1)
+        for i in range(k):
+            x_ext = xsum - x[:, i]
+            xi = (1.0 - alpha) * x[:, i] + alpha * fill_server(i, x_ext)
+            xsum += xi - x[:, i]
+            x[:, i] = xi
+        resid = float(np.abs(x - x_prev).max())
+        if resid <= tol * scale:
+            return x, SolveInfo(rounds, True, resid)
+        # only damp once the sweep has clearly stalled (paper instances
+        # converge exactly within a handful of undamped rounds)
+        if (adaptive_damping and rounds >= 8
+                and resid > 0.98 * prev_resid and alpha > 0.15):
+            alpha *= 0.7
+        prev_resid = resid
+    approx = resid <= loose_tol * scale
+    return x, SolveInfo(max_rounds, approx, resid, approx=approx)
+
 
 def solve_psdsf_rdm(
     problem: AllocationProblem,
@@ -187,44 +253,19 @@ def solve_psdsf_rdm(
     loose_tol: float = 5e-3,
     adaptive_damping: bool = True,
 ) -> tuple[Allocation, SolveInfo]:
-    """PS-DSF under RDM: sweep servers until fixed point of the rebuild map.
-
-    Convergence of the iterated server procedure is an OPEN question the
-    paper defers to future work (footnote 5). Empirically: every instance in
-    the paper converges exactly in <= 5 rounds; large adversarial random
-    instances can enter small limit cycles (~0.3% of gamma-scale). We
-    mitigate with adaptive damping (x <- (1-a) x + a rebuild(x), shrinking a
-    when the residual stalls) and report ``approx=True`` when only the loose
-    tolerance (default 0.5% of scale) is met — immaterial for scheduling but
-    recorded honestly.
-    """
+    """PS-DSF under RDM: sweep servers until fixed point of the rebuild map
+    (see ``sweep_fixed_point`` for the damping/acceptance contract)."""
     g = gamma_matrix(problem)
-    n, k = problem.num_users, problem.num_servers
-    x = np.zeros((n, k)) if x0 is None else np.array(x0, dtype=np.float64)
-    scale = max(1.0, g.max(initial=1.0))
-    resid = np.inf
-    prev_resid = np.inf
-    alpha = 1.0
-    for rounds in range(1, max_rounds + 1):
-        x_prev = x.copy()
-        for i in range(k):
-            x_ext = x.sum(axis=1) - x[:, i]
-            xi = server_fill_rdm(
-                problem.capacities[i], problem.demands,
-                problem.weights, g[:, i], x_ext)
-            x[:, i] = (1.0 - alpha) * x[:, i] + alpha * xi
-        resid = float(np.abs(x - x_prev).max())
-        if resid <= tol * scale:
-            return Allocation(problem, x), SolveInfo(rounds, True, resid)
-        # only damp once the sweep has clearly stalled (paper instances
-        # converge exactly within a handful of undamped rounds)
-        if (adaptive_damping and rounds >= 8
-                and resid > 0.98 * prev_resid and alpha > 0.15):
-            alpha *= 0.7
-        prev_resid = resid
-    approx = resid <= loose_tol * scale
-    return Allocation(problem, x), SolveInfo(max_rounds, approx, resid,
-                                             approx=approx)
+
+    def fill(i, x_ext):
+        return server_fill_rdm(problem.capacities[i], problem.demands,
+                               problem.weights, g[:, i], x_ext)
+
+    x, info = sweep_fixed_point(
+        fill, problem.num_users, problem.num_servers, g.max(initial=1.0),
+        x0=x0, max_rounds=max_rounds, tol=tol, loose_tol=loose_tol,
+        adaptive_damping=adaptive_damping)
+    return Allocation(problem, x), info
 
 
 def solve_psdsf_tdm(
@@ -236,31 +277,18 @@ def solve_psdsf_tdm(
     adaptive_damping: bool = True,
 ) -> tuple[Allocation, SolveInfo]:
     """PS-DSF under TDM (Def. 4 feasibility). Same adaptive damping and
-    approximate-convergence contract as the RDM solver (see its docstring)."""
+    approximate-convergence contract as the RDM solver."""
     g = gamma_matrix(problem)
-    n, k = problem.num_users, problem.num_servers
-    x = np.zeros((n, k)) if x0 is None else np.array(x0, dtype=np.float64)
-    scale = max(1.0, g.max(initial=1.0))
-    resid = np.inf
-    prev_resid = np.inf
-    alpha = 1.0
-    for rounds in range(1, max_rounds + 1):
-        x_prev = x.copy()
-        for i in range(k):
-            x_ext = x.sum(axis=1) - x[:, i]
-            xi = server_fill_tdm(
-                problem.demands, problem.weights, g[:, i], x_ext)
-            x[:, i] = (1.0 - alpha) * x[:, i] + alpha * xi
-        resid = float(np.abs(x - x_prev).max())
-        if resid <= tol * scale:
-            return Allocation(problem, x), SolveInfo(rounds, True, resid)
-        if (adaptive_damping and rounds >= 8
-                and resid > 0.98 * prev_resid and alpha > 0.15):
-            alpha *= 0.7
-        prev_resid = resid
-    approx = resid <= loose_tol * scale
-    return Allocation(problem, x), SolveInfo(max_rounds, approx, resid,
-                                             approx=approx)
+
+    def fill(i, x_ext):
+        return server_fill_tdm(problem.demands, problem.weights, g[:, i],
+                               x_ext)
+
+    x, info = sweep_fixed_point(
+        fill, problem.num_users, problem.num_servers, g.max(initial=1.0),
+        x0=x0, max_rounds=max_rounds, tol=tol, loose_tol=loose_tol,
+        adaptive_damping=adaptive_damping)
+    return Allocation(problem, x), info
 
 
 # ---------------------------------------------------------------------------

@@ -119,11 +119,15 @@ def _fill_one_server_tdm(demands, phi, gamma_i, x_ext):
 
 
 def _solve_core(demands, capacities, weights, gamma, x0, mode, max_rounds,
-                tol, servers=None, alpha0=1.0):
+                tol, servers=None, alpha0=1.0, scale=None):
     """Traced solver body shared by the single and batched entry points.
 
     All array arguments are positional so ``jax.vmap`` maps over them
     directly; ``mode``/``max_rounds``/``tol`` close over the trace.
+    ``scale`` overrides the residual-acceptance scale (defaults to
+    ``gamma.max()`` — right for PS-DSF where gamma is the per-server
+    monopolization; baseline fills pass the per-server gamma scale
+    explicitly because their level-rate "gamma" sums over servers).
 
     ``servers`` (optional int32 vector) restricts each sweep to those
     servers — the incremental/event-driven mode: after churn touches a few
@@ -138,7 +142,7 @@ def _solve_core(demands, capacities, weights, gamma, x0, mode, max_rounds,
     fall to 0.01 (a 100x residual reduction) once the residual stops
     contracting; exact small instances converge before any damping starts.
     """
-    scale = jnp.maximum(1.0, gamma.max())
+    scale = jnp.maximum(1.0, gamma.max() if scale is None else scale)
     k = gamma.shape[1]
     sweep = jnp.arange(k, dtype=jnp.int32) if servers is None else servers
 

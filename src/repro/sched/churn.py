@@ -24,6 +24,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.engine import SWEEP_MECHANISMS
 from repro.core.gamma import gamma_matrix
 from repro.core.types import Allocation, AllocationProblem
 
@@ -60,27 +61,48 @@ class ChurnRecord:
     bottleneck_server: int   # server attaining it
 
 
+#: sweep-based mechanisms the simulator can maintain a fixed point for
+#: (closed-form mechanisms — drf, uniform — have no per-server sweep to
+#: warm); one source of truth shared with the engine's jax routing
+TICKABLE_MECHANISMS = SWEEP_MECHANISMS
+
+
 class ChurnSimulator:
-    """Maintains a PS-DSF fixed point through an event stream.
+    """Maintains an allocator fixed point through an event stream.
 
     ``problem`` holds the full user population; ``initial_active`` masks who
-    is present at t=0 (arrivals flip users on). The solver engine is the
-    jitted JAX path; set ``compare_cold=True`` to also run each re-solve
+    is present at t=0 (arrivals flip users on). ``mechanism`` selects any
+    sweep-based registered allocator (PS-DSF by default; the exact baselines
+    re-equilibrate through the same warm-started sweep). The solver engine is
+    the jitted JAX path; set ``compare_cold=True`` to also run each re-solve
     cold and record the round-count gap (used by the ``dynamic_churn``
-    benchmark row).
+    benchmark row). ``mode`` ("rdm"/"tdm") is the legacy PS-DSF-regime
+    spelling, kept as an alias.
     """
 
-    def __init__(self, problem: AllocationProblem, mode: str = "rdm",
+    def __init__(self, problem: AllocationProblem, mode: Optional[str] = None,
                  warm_start: bool = True, compare_cold: bool = False,
                  max_rounds: int = 256, tol: float = 1e-6,
                  initial_active: Optional[np.ndarray] = None,
-                 telemetry: bool = True, interpret_vds: bool = True):
+                 telemetry: bool = True, interpret_vds: bool = True,
+                 mechanism: Optional[str] = None):
         import jax.numpy as jnp
 
-        if mode not in ("rdm", "tdm"):
-            raise ValueError(mode)
+        if mode is not None and mechanism is not None:
+            raise ValueError(
+                "pass either the legacy mode= alias or mechanism=, not both")
+        if mode is not None:
+            if mode not in ("rdm", "tdm"):
+                raise ValueError(mode)
+            mechanism = f"psdsf-{mode}"
+        if mechanism is None:
+            mechanism = "psdsf-rdm"
+        if mechanism not in TICKABLE_MECHANISMS:
+            raise ValueError(
+                f"mechanism must be sweep-based, one of "
+                f"{TICKABLE_MECHANISMS}: {mechanism!r}")
         self.problem = problem
-        self.mode = mode
+        self.mechanism = mechanism
         self.warm_start = warm_start
         self.compare_cold = compare_cold
         self.max_rounds = max_rounds
@@ -118,7 +140,8 @@ class ChurnSimulator:
             self._demands, self._caps, self._weights, self._elig,
             jnp.asarray(self.active), jnp.asarray(self.cap_scale, jnp.float32),
             None if x0 is None else jnp.asarray(x0, jnp.float32),
-            mode=self.mode, max_rounds=self.max_rounds, tol=self.tol)
+            mechanism=self.mechanism, max_rounds=self.max_rounds,
+            tol=self.tol)
         return np.array(x, dtype=np.float64), int(rounds), float(resid)
 
     def step(self, events: Sequence[ChurnEvent], time_now: float
@@ -177,26 +200,39 @@ class ChurnSimulator:
 
 @_functools.lru_cache(maxsize=1)
 def _resolve_fn():
-    """Jitted: effective capacities -> gamma -> warm-started solve. Cached
-    so all simulator instances share one jit cache."""
+    """Jitted: effective capacities -> level-rate matrix for the chosen
+    mechanism -> warm-started sweep. Cached so all simulator instances share
+    one jit cache (one compilation per (mechanism, shapes))."""
     import functools
 
     import jax.numpy as jnp
     import jax
 
+    from repro.core.baselines_jax import level_rate_matrix_jnp
     from repro.core.psdsf_jax import _solve_core, gamma_matrix_jnp
 
-    @functools.partial(jax.jit, static_argnames=("mode", "max_rounds"))
+    @functools.partial(jax.jit, static_argnames=("mechanism", "max_rounds"))
     def resolve(demands, capacities, weights, eligibility, active, cap_scale,
-                x0, *, mode, max_rounds, tol):
+                x0, *, mechanism, max_rounds, tol):
         caps_eff = capacities * cap_scale[:, None]
         g = gamma_matrix_jnp(demands, caps_eff, eligibility)
         g = jnp.where(active[:, None], g, 0.0)
+        if mechanism in ("psdsf-rdm", "psdsf-tdm"):
+            lg = g
+            mode = mechanism.removeprefix("psdsf-")
+        else:
+            lg = level_rate_matrix_jnp(demands, caps_eff, eligibility,
+                                       mechanism)
+            lg = jnp.where(active[:, None], lg, 0.0)
+            mode = "rdm"
         if x0 is None:
-            x0 = jnp.zeros(g.shape, dtype=demands.dtype)
+            x0 = jnp.zeros(lg.shape, dtype=demands.dtype)
         x0 = jnp.where(active[:, None], x0, 0.0)
-        return _solve_core(demands, caps_eff, weights, g, x0, mode,
-                           max_rounds, tol)
+        # acceptance band always on the ACTIVE users' per-server gamma scale
+        # (the baseline level rates sum gamma over servers — see
+        # baselines_jax; and a departed huge-gamma user must not loosen it)
+        return _solve_core(demands, caps_eff, weights, lg, x0, mode,
+                           max_rounds, tol, scale=g.max())
 
     return resolve
 

@@ -21,7 +21,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core import AllocationProblem, solve_psdsf_rdm
+from repro.core import AllocationProblem, ensure_converged, get_allocator
 
 RESOURCES = ("chips", "hbm_gb", "host_gb", "ici_gbps", "dcn_gbps")
 
@@ -116,22 +116,47 @@ class Cluster:
     def problem(self, jobs: Sequence[TenantJob]) -> AllocationProblem:
         demands = np.stack([j.demand() for j in jobs])
         caps = np.stack([p.capacity() for p in self.pods])
-        elig = np.array([[1.0 if j.eligible(p) else 0.0 for p in self.pods]
-                         for j in jobs])
+        # Eligibility built column-vectorized over pods (no jobs x pods
+        # Python double loop): each constraint is one broadcast predicate.
+        hbm_pc = np.array([p.hbm_gb_per_chip for p in self.pods])
+        dcn = np.array([p.dcn_gbps for p in self.pods])
+        gens = np.array([p.generation for p in self.pods])
+        min_hbm = np.array([j.min_hbm_per_chip for j in jobs])
+        needs_dcn = np.array([j.needs_dcn for j in jobs])
+        elig = (hbm_pc[None, :] >= min_hbm[:, None]).astype(float)
+        elig *= ~needs_dcn[:, None] | (dcn[None, :] > 0)
+        for ji, j in enumerate(jobs):
+            if j.generations:
+                allowed = ([j.generations] if isinstance(j.generations, str)
+                           else list(j.generations))
+                elig[ji] *= np.isin(gens, allowed)
         weights = np.array([j.weight for j in jobs])
         return AllocationProblem(demands, caps, weights, elig)
 
 
-def schedule(cluster: Cluster, jobs: Sequence[TenantJob]) -> Dict[str, float]:
-    """PS-DSF (RDM) replica counts per job (continuous; launcher floors)."""
+def _solve_placed(cluster: Cluster, jobs: Sequence[TenantJob],
+                  mechanism: str, solver_kw):
     prob = cluster.problem(jobs)
-    alloc, info = solve_psdsf_rdm(prob)
-    if not info.converged:
-        raise RuntimeError("PS-DSF did not converge on cluster problem")
+    alloc, info = get_allocator(mechanism)(prob, **solver_kw)
+    ensure_converged(info, what=f"{mechanism} on cluster problem")
+    # Pooled mechanisms (drf) solve a relaxation that DROPS the placement
+    # constraints (generation allow-list, min HBM/chip, DCN) — their quotas
+    # would be unplaceable, so reject them like the serving layer does.
+    if alloc.problem is not prob:
+        raise ValueError(
+            f"mechanism {mechanism!r} solves a pooled relaxation that drops "
+            f"placement constraints; pick a placement-aware allocator")
+    return alloc
+
+
+def schedule(cluster: Cluster, jobs: Sequence[TenantJob],
+             mechanism: str = "psdsf-rdm", **solver_kw) -> Dict[str, float]:
+    """Replica counts per job (continuous; launcher floors) under any
+    registered placement-aware allocator (default PS-DSF/RDM)."""
+    alloc = _solve_placed(cluster, jobs, mechanism, solver_kw)
     return {j.name: float(x) for j, x in zip(jobs, alloc.tasks_per_user)}
 
 
-def schedule_detail(cluster: Cluster, jobs: Sequence[TenantJob]):
-    prob = cluster.problem(jobs)
-    alloc, _ = solve_psdsf_rdm(prob)
-    return alloc
+def schedule_detail(cluster: Cluster, jobs: Sequence[TenantJob],
+                    mechanism: str = "psdsf-rdm", **solver_kw):
+    return _solve_placed(cluster, jobs, mechanism, solver_kw)

