@@ -1,0 +1,81 @@
+"""CI gate for the ``placement_comparison`` benchmark.
+
+Reads the stranded-capacity fractions the benchmark wrote into the smoke
+artifact (``artifacts/BENCH_smoke.json``) and fails when routed placement
+regresses:
+
+  * a ``headroom``/``bestfit`` row strands more than the committed baseline
+    (``benchmarks/placement_baseline.json``) plus a small tolerance;
+  * ``headroom`` no longer strands less than ``level`` on the global-share
+    rows the refactor exists to improve (the dense/cell tsf + cdrfh pairs);
+  * an expected row disappeared (a silently skipped benchmark must not
+    pass the gate).
+
+Update the baseline intentionally (re-run the benchmark, commit the new
+numbers) — never by loosening this check.
+
+Usage: python benchmarks/check_placement.py [SMOKE_JSON] [BASELINE_JSON]
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+from pathlib import Path
+
+#: absolute stranded-fraction slack vs the committed baseline (the fills are
+#: deterministic; this only absorbs fp/library drift)
+TOLERANCE = 0.02
+
+#: rows where headroom must strictly beat level (the refactor's headline)
+MUST_IMPROVE = tuple(
+    f"placement_{inst}_{mech}" for inst in ("dense", "cell")
+    for mech in ("tsf", "cdrfh"))
+
+
+def stranded_by_row(rows: list[dict]) -> dict[str, float]:
+    out = {}
+    for row in rows:
+        m = re.search(r"stranded=([0-9.eE+-]+)", row.get("derived", ""))
+        if m and row["name"].startswith("placement_"):
+            out[row["name"]] = float(m.group(1))
+    return out
+
+
+def main(argv=None) -> int:
+    args = list(argv if argv is not None else sys.argv[1:])
+    smoke = Path(args[0] if args else "artifacts/BENCH_smoke.json")
+    base = Path(args[1] if len(args) > 1
+                else Path(__file__).parent / "placement_baseline.json")
+    got = stranded_by_row(json.loads(smoke.read_text()))
+    want = json.loads(base.read_text())["stranded"]
+    failures = []
+    for name, baseline in want.items():
+        if name not in got:
+            failures.append(f"missing row {name} (benchmark skipped?)")
+            continue
+        if (name.endswith(("_headroom", "_bestfit"))
+                and got[name] > baseline + TOLERANCE):
+            failures.append(
+                f"{name}: stranded {got[name]:.4f} regressed vs baseline "
+                f"{baseline:.4f} (+{TOLERANCE} tolerance)")
+    for prefix in MUST_IMPROVE:
+        lvl, head = got.get(f"{prefix}_level"), got.get(f"{prefix}_headroom")
+        if lvl is None or head is None:
+            failures.append(f"missing level/headroom pair for {prefix}")
+        elif head >= lvl:
+            failures.append(
+                f"{prefix}: headroom ({head:.4f}) no longer strands less "
+                f"than level ({lvl:.4f})")
+    if failures:
+        print("placement gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"placement gate OK: {len(want)} rows within {TOLERANCE} of "
+          f"baseline; headroom < level on {len(MUST_IMPROVE)} pairs")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

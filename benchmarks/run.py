@@ -12,6 +12,9 @@ reproduced quantity or headline metric).
                        re-solves vs sequential cold psdsf_solve_jax calls
   mechanism_comparison Section V cross-mechanism utilization rows for every
                        registered allocator + exact-vs-legacy filler speed
+  placement_comparison mechanism x placement-strategy utilization and
+                       stranded-capacity rows (dense + cell instances);
+                       gated vs benchmarks/placement_baseline.json in CI
   dynamic_churn        Poisson event stream through the churn simulator,
                        warm vs cold re-solve rounds
   serving_fairness     PS-DSF admission at the serving layer
@@ -350,6 +353,56 @@ def mechanism_comparison():
           f"ratio_vs_1pct={t_jit / t_conv:.3f} rounds={int(rounds)}")
 
 
+def placement_comparison():
+    """Mechanism x placement-strategy cross-product: mean utilization and
+    stranded-capacity fraction per pair, on the dense contended instance
+    pinned by tests/test_placement.py and on ``cell_cluster_instance``.
+
+    The headline the refactor must demonstrate (ROADMAP PR 2 note): the
+    mix-oblivious level fill strands roughly 2x what greedy best-fit
+    recovers on dense instances; ``headroom`` routing recovers a measured
+    share of that gap and ``bestfit`` bounds it. PS-DSF's gamma-weighted
+    per-server fill is already mix-aware, so its headroom row moves little
+    — the recovery concentrates in the global-share mechanisms. Stranded
+    fractions land in ``derived`` (``stranded=``) so the CI smoke artifact
+    records them and ``benchmarks/check_placement.py`` gates regressions
+    against the committed baseline.
+    """
+    from repro.core import solve
+    from repro.core.instances import (cell_cluster_instance,
+                                      dense_random_instance)
+
+    cell, _, _ = cell_cluster_instance(num_users=256, num_servers=32,
+                                       cells=4, seed=0)
+    instances = (("dense", dense_random_instance()), ("cell", cell))
+    recovered = {}
+    for inst_name, prob in instances:
+        for mech in ("psdsf-rdm", "tsf", "cdrfh"):
+            stranded = {}
+            for placement in ("level", "headroom", "bestfit"):
+                us, (alloc, info) = _t(solve, prob, mechanism=mech,
+                                       placement=placement, repeat=1,
+                                       max_rounds=128, tol=1e-6)
+                cap = alloc.problem.capacities
+                util = float(alloc.utilization()[cap > 0].mean())
+                stranded[placement] = info.stranded_frac
+                print(f"placement_{inst_name}_{mech.replace('-', '_')}"
+                      f"_{placement},{us:.0f},util={util:.3f} "
+                      f"stranded={info.stranded_frac:.4f} "
+                      f"tasks={float(alloc.tasks_per_user.sum()):.1f} "
+                      f"rounds={info.rounds} conv={info.converged}")
+            gap = stranded["level"] - stranded["bestfit"]
+            recovered[(inst_name, mech)] = (
+                (stranded["level"] - stranded["headroom"]) / gap
+                if gap > 1e-9 else float("nan"))
+    dense_tsf = recovered[("dense", "tsf")]
+    # informational line, deliberately NOT name,us,derived-shaped: a
+    # 0-us summary row must not enter the JSON perf artifact
+    print(f"placement_comparison headline: headroom recovers "
+          f"{dense_tsf:.0%} of the level->bestfit stranded-capacity gap "
+          f"(dense/tsf; per-pair rows above)")
+
+
 def dynamic_churn():
     """Poisson arrival/departure/degrade stream through ``ChurnSimulator``:
     warm-started re-solve rounds vs cold, per event batch."""
@@ -434,8 +487,8 @@ def roofline_summary():
 
 ALL_BENCHES = (fig1_examples, fig23_example, table_google_cluster,
                fig6_dynamic, allocator_scaling, allocator_scaling_batched,
-               mechanism_comparison, dynamic_churn, serving_fairness,
-               kernel_reference, roofline_summary)
+               mechanism_comparison, placement_comparison, dynamic_churn,
+               serving_fairness, kernel_reference, roofline_summary)
 
 
 def main(argv=None) -> None:

@@ -1,11 +1,15 @@
-"""PS-DSF core: the paper's allocation mechanism, its baselines, and the
-unified allocator registry (``engine``)."""
+"""PS-DSF core: the paper's allocation mechanism, its baselines, the
+placement-strategy layer (``placement``), and the unified allocator
+registry (``engine``)."""
 from .types import Allocation, AllocationProblem
 from .gamma import (dominant_resource, gamma_constrained_total, gamma_matrix,
                     gamma_unconstrained_total, normalized_vds, vds)
-from .psdsf import (algorithm1_literal, server_fill_rdm, server_fill_tdm,
-                    solve_psdsf_rdm, solve_psdsf_tdm, sweep_fixed_point,
-                    SolveInfo)
+from .placement import (PlacementStrategy, SolveInfo, get_placement,
+                        list_placements, register_placement,
+                        routed_level_fill, server_fill_rdm, server_fill_tdm,
+                        solve_with_placement, stranded_fraction,
+                        sweep_fixed_point)
+from .psdsf import (algorithm1_literal, solve_psdsf_rdm, solve_psdsf_tdm)
 from .baselines import (level_rate_matrix, score_weights, solve_cdrf,
                         solve_cdrfh, solve_drf_pooled, solve_drf_single_pool,
                         solve_level_fill, solve_tsf, uniform_allocation)
@@ -20,6 +24,9 @@ __all__ = [
     "gamma_unconstrained_total", "gamma_constrained_total",
     "solve_psdsf_rdm", "solve_psdsf_tdm", "algorithm1_literal",
     "server_fill_rdm", "server_fill_tdm", "sweep_fixed_point",
+    "PlacementStrategy", "get_placement", "list_placements",
+    "register_placement", "routed_level_fill", "solve_with_placement",
+    "stranded_fraction",
     "solve_cdrfh", "solve_tsf", "solve_cdrf", "solve_drf_single_pool",
     "solve_drf_pooled", "solve_level_fill", "level_rate_matrix",
     "score_weights", "uniform_allocation", "DistributedPSDSF",

@@ -22,13 +22,18 @@ epsilon-increment simulation with its O(1/num_steps) error — and its
 ``num_steps`` knob — is retained only as ``_epsilon_level_fill_reference``
 for golden-parity tests and the speed benchmark.
 
-Placement semantics: per-server progressive fills — the same placement
-engine PS-DSF itself uses, so cross-mechanism comparisons are
-apples-to-apples. Like PS-DSF under RDM (which the paper notes is not
-Pareto optimal), the per-server fixed point does not model coordinated
-cross-server reshuffles; off the worked examples its common level can sit a
-few percent below the legacy greedy filler's (see the fig2/google-cluster
-placement-band tests for the pinned gaps).
+Placement semantics: selected by the ``placement=`` knob (see
+``core.placement``). The default ``"level"`` is per-server progressive
+fills — the same placement engine PS-DSF itself uses, so cross-mechanism
+comparisons are apples-to-apples. Like PS-DSF under RDM (which the paper
+notes is not Pareto optimal), the per-server fixed point does not model
+coordinated cross-server reshuffles; off the worked examples its common
+level can sit a few percent below the legacy greedy filler's (see the
+fig2/google-cluster placement-band tests for the pinned gaps), and on
+dense instances it strands roughly 2x the capacity greedy best-fit
+placement recovers — ``placement="headroom"`` (mix-aware routing between
+saturation events) and ``"bestfit"`` (greedy routing) close most of that
+gap at the cost of no longer reproducing the worked-example totals.
 
 The jitted/vmapped twin of this filler lives in ``baselines_jax``; the
 mechanism registry exposing all of these behind one interface lives in
@@ -42,7 +47,7 @@ import numpy as np
 
 from .gamma import (gamma_constrained_total, gamma_matrix,
                     gamma_unconstrained_total)
-from .psdsf import SolveInfo, server_fill_rdm, sweep_fixed_point
+from .placement import SolveInfo, solve_with_placement
 from .types import Allocation, AllocationProblem
 
 #: mechanisms expressible as a score-weighted level fill (see module docstring)
@@ -97,30 +102,29 @@ def solve_level_fill(
     loose_tol: float = 5e-3,
     adaptive_damping: bool = True,
     scale: Optional[float] = None,
+    placement: str = "level",
+    server_order: str = "fixed",
 ) -> tuple[Allocation, SolveInfo]:
     """Exact weighted max-min level fill with placement.
 
     ``level_gamma[n, i]`` is the rate (tasks per unit level) at which user n
     fills on server i while unfrozen — ``w_n`` masked by eligibility for the
-    baselines. Event-driven per-server fills (saturation events, no epsilon
-    steps) swept to a fixed point; same convergence/residual contract as the
-    PS-DSF solvers. The acceptance band is scaled by the PER-SERVER
+    baselines. Under the default ``placement="level"``: event-driven
+    per-server fills (saturation events, no epsilon steps) swept to a fixed
+    point; same convergence/residual contract as the PS-DSF solvers.
+    ``placement="headroom"``/``"bestfit"`` instead run the routed global
+    fill (``placement.routed_level_fill`` — mix-aware routing between
+    saturation events; ``x0`` and the sweep knobs are then ignored, the
+    fill is one-shot). The acceptance band is scaled by the PER-SERVER
     monopolization scale (``gamma_matrix(problem).max()``, an allocation
     magnitude), NOT by ``level_gamma`` — the score weights sum gamma over
     servers, so using them would loosen the band ~linearly with K.
     """
-
-    def fill(i, x_ext):
-        return server_fill_rdm(problem.capacities[i], problem.demands,
-                               problem.weights, level_gamma[:, i], x_ext)
-
-    if scale is None:
-        scale = gamma_matrix(problem).max(initial=1.0)
-    x, info = sweep_fixed_point(
-        fill, problem.num_users, problem.num_servers, scale, x0=x0,
-        max_rounds=max_rounds, tol=tol, loose_tol=loose_tol,
-        adaptive_damping=adaptive_damping)
-    return Allocation(problem, x), info
+    return solve_with_placement(
+        problem, level_gamma, placement=placement, mode="rdm",
+        per_server_rates=False, scale=scale, x0=x0, max_rounds=max_rounds,
+        tol=tol, loose_tol=loose_tol, adaptive_damping=adaptive_damping,
+        server_order=server_order)
 
 
 def _solve_baseline(problem: AllocationProblem, mechanism: str,

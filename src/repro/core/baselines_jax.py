@@ -19,9 +19,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from .baselines import LEVEL_FILL_MECHANISMS, level_rate_matrix
-from .psdsf import SolveInfo
-from .psdsf_jax import _BIG, _solve_core, _solve_dtype, gamma_matrix_jnp
+from .placement import ROUTED_FILL_CORRECTORS, SolveInfo, stranded_fraction
+from .psdsf_jax import (_BIG, _check_placement, _solve_core, _solve_dtype,
+                        gamma_matrix_jnp)
 from .types import Allocation, AllocationProblem
+
+_TOL = 1e-9
 
 
 def level_rate_matrix_jnp(demands, capacities, eligibility, mechanism: str):
@@ -60,15 +63,103 @@ def _gamma_scale(demands, capacities, level_gamma):
     return g.max()
 
 
-@functools.partial(jax.jit, static_argnames=("max_rounds",))
+# ---------------------------------------------------------------------------
+# Routed global fill: the jitted mirror of ``placement.routed_level_fill``
+# ---------------------------------------------------------------------------
+
+def _routed_fill_core(demands, capacities, weights, level_gamma,
+                      correctors=ROUTED_FILL_CORRECTORS):
+    """Headroom placement for the global-share mechanisms, traced: all
+    users' levels rise together, each user's rate split across its eligible
+    servers proportional to per-server headroom for its demand mix, splits
+    re-derived at every saturation event (+ ``correctors`` midpoint
+    passes). Same event structure as the numpy fill — a ``while_loop``
+    bounded by K*R + N events, each saturating a (server, resource) pair or
+    freezing a user. Returns (x, events, residual=0) matching the
+    ``_solve_core`` output contract (the fill is one-shot exact: nothing
+    iterates, nothing can fail to converge)."""
+    n, r_cnt = demands.shape
+    k = capacities.shape[0]
+    dtype = _solve_dtype(demands)
+    cap = capacities.astype(dtype)
+    eligible = level_gamma > 0
+    cap_scale = jnp.maximum(cap, jnp.maximum(cap.max(initial=1.0) * 1e-9,
+                                             1e-12))
+
+    def headroom(free):
+        ratio = jnp.where(demands[:, None, :] > 0,
+                          free[None, :, :]
+                          / jnp.maximum(demands, 1e-300)[:, None, :], _BIG)
+        return jnp.maximum(jnp.where(eligible, ratio.min(axis=2), 0.0), 0.0)
+
+    # gates are RELATIVE to the instance's own magnitudes (mirrors the
+    # numpy fill) so a uniformly rescaled problem fills identically
+    h_scale = jnp.maximum(headroom(cap).max(initial=0.0), 1e-300)
+
+    def split_of(h, active):
+        hsum = h.sum(axis=1)
+        s = jnp.where(hsum[:, None] > 0,
+                      h / jnp.maximum(hsum[:, None], 1e-300), 0.0)
+        return s * active[:, None]
+
+    def slope_of(split):
+        task_rate = weights[:, None] * level_gamma * split
+        return task_rate, jnp.einsum("nk,nr->kr", task_rate, demands)
+
+    def slope_ref(slope):
+        return jnp.maximum(slope.max(initial=0.0), 1e-300)
+
+    def next_dl(slope, free):
+        dl = jnp.where(slope > _TOL * slope_ref(slope),
+                       free / jnp.maximum(slope, 1e-300), _BIG)
+        return dl.min()
+
+    def cond(carry):
+        _, _, active, ev = carry
+        return active.any() & (ev < k * r_cnt + n + 1)
+
+    def body(carry):
+        x, free, active, ev = carry
+        h = headroom(free)
+        active = active & (h.sum(axis=1) > _TOL * h_scale)
+        split = split_of(h, active)
+        for _ in range(correctors):
+            _, slope = slope_of(split)
+            dl = next_dl(slope, free)
+            dl = jnp.where(dl < _BIG * 0.5, dl, 0.0)
+            h_mid = headroom(jnp.maximum(free - slope * (0.5 * dl), 0.0))
+            split = split_of(h_mid, active)
+        task_rate, slope = slope_of(split)
+        dl = next_dl(slope, free)
+        ok = active.any() & (dl < _BIG * 0.5)
+        dl = jnp.where(ok, jnp.maximum(dl, 0.0), 0.0)
+        x = x + task_rate * dl
+        free = jnp.maximum(free - slope * dl, 0.0)
+        sat = (free <= _TOL * cap_scale) & (slope > _TOL * slope_ref(slope))
+        free = jnp.where(sat, jnp.zeros_like(free), free)
+        return x, free, active & ok, ev + 1
+
+    x, _, _, events = jax.lax.while_loop(
+        cond, body, (jnp.zeros((n, k), dtype), cap,
+                     eligible.any(axis=1), jnp.array(0)))
+    return x, events, jnp.array(0.0, dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("max_rounds", "placement"))
 def baseline_solve_jax(demands, capacities, weights, level_gamma, *, x0=None,
-                       max_rounds: int = 256, tol: float = 1e-6):
+                       max_rounds: int = 256, tol: float = 1e-6,
+                       placement: str = "level"):
     """Solve one exact baseline fill. Returns (x (N,K), rounds, residual).
 
     ``level_gamma`` is the (N, K) level-rate matrix from
     ``level_rate_matrix`` / ``level_rate_matrix_jnp``. Warm-startable via
-    ``x0`` exactly like ``psdsf_solve_jax``.
+    ``x0`` exactly like ``psdsf_solve_jax``. ``placement="headroom"`` runs
+    the routed global fill instead of the per-server sweep (one-shot exact;
+    ``x0`` and the sweep knobs are ignored); ``"bestfit"`` is numpy-only.
     """
+    _check_placement(placement)
+    if placement == "headroom":
+        return _routed_fill_core(demands, capacities, weights, level_gamma)
     n, k = level_gamma.shape
     dtype = _solve_dtype(demands)
     if x0 is None:
@@ -78,22 +169,27 @@ def baseline_solve_jax(demands, capacities, weights, level_gamma, *, x0=None,
                        scale=_gamma_scale(demands, capacities, level_gamma))
 
 
-@functools.partial(jax.jit, static_argnames=("max_rounds",))
+@functools.partial(jax.jit, static_argnames=("max_rounds", "placement"))
 def baseline_solve_batched(demands, capacities, weights, level_gamma, *,
-                           x0=None, max_rounds: int = 256, tol: float = 1e-6):
+                           x0=None, max_rounds: int = 256, tol: float = 1e-6,
+                           placement: str = "level"):
     """Solve B independent baseline fills in one jitted vmap call.
 
     Shapes as ``psdsf_solve_batched``: demands (B, N, R), capacities
     (B, K, R), weights (B, N), level_gamma (B, N, K), optional x0 (B, N, K).
     Pad heterogeneous problems with ``psdsf_jax.batch_problems`` (padding is
     inert: padded users carry level rate 0, padded servers zero capacity).
+    ``placement`` as in ``baseline_solve_jax``.
     """
+    _check_placement(placement)
     b, n, k = level_gamma.shape
     dtype = _solve_dtype(demands)
     if x0 is None:
         x0 = jnp.zeros((b, n, k), dtype=dtype)
 
     def solve(d, c, w, lg, x0_):
+        if placement == "headroom":
+            return _routed_fill_core(d, c, w, lg)
         return _solve_core(d, c, w, lg, x0_, "rdm", max_rounds, tol,
                            scale=_gamma_scale(d, c, lg))
 
@@ -115,7 +211,7 @@ def batch_level_rates(problems, mechanism: str, dtype=np.float32):
 
 def solve_baseline_jax(problem: AllocationProblem, mechanism: str, x0=None,
                        max_rounds: int = 256, tol: float = 1e-6,
-                       loose_tol: float = 5e-3
+                       loose_tol: float = 5e-3, placement: str = "level"
                        ) -> tuple[Allocation, SolveInfo]:
     """Convenience wrapper with the same container/contract as the numpy
     baseline solvers (``solve_tsf`` & co.)."""
@@ -127,8 +223,11 @@ def solve_baseline_jax(problem: AllocationProblem, mechanism: str, x0=None,
         jnp.asarray(problem.demands), jnp.asarray(problem.capacities),
         jnp.asarray(problem.weights), jnp.asarray(lg),
         x0=None if x0 is None else jnp.asarray(x0), max_rounds=max_rounds,
-        tol=tol)
-    return (Allocation(problem, np.asarray(x, dtype=np.float64)),
+        tol=tol, placement=placement)
+    x = np.asarray(x, dtype=np.float64)
+    return (Allocation(problem, x),
             SolveInfo.from_residual(int(rounds), float(resid),
                                     float(g.max(initial=1.0)), tol,
-                                    loose_tol))
+                                    loose_tol, placement=placement,
+                                    stranded_frac=stranded_fraction(
+                                        problem, x, gamma=g)))

@@ -26,10 +26,14 @@ Registered mechanisms:
   cdrf        constrained DRF [4] (exact)
   uniform     phi-proportional share of every server (closed form)
 
-``solve(problem, mechanism, backend="numpy"|"jax")`` additionally routes the
-sweep-based mechanisms through the jitted engine (``psdsf_jax`` /
-``baselines_jax``) — same fixed points, 10^3-user scales; closed-form
-mechanisms (drf, uniform) ignore the backend.
+``solve(problem, mechanism, backend="numpy"|"jax", placement=...)``
+additionally routes the sweep-based mechanisms through the jitted engine
+(``psdsf_jax`` / ``baselines_jax``) — same fixed points, 10^3-user scales;
+closed-form mechanisms (drf, uniform) ignore the backend and accept only
+``placement="level"`` (they have no placement freedom). ``placement``
+selects the routing strategy from ``core.placement`` (level / headroom /
+bestfit); the returned ``SolveInfo`` records the strategy and the
+stranded-capacity fraction of the layout.
 """
 from __future__ import annotations
 
@@ -37,6 +41,7 @@ from typing import Callable, Dict, Protocol, Tuple
 
 from .baselines import (solve_cdrf, solve_cdrfh, solve_drf_pooled, solve_tsf,
                         uniform_allocation)
+from .placement import get_placement, stranded_fraction
 from .psdsf import SolveInfo, solve_psdsf_rdm, solve_psdsf_tdm
 from .types import Allocation, AllocationProblem
 
@@ -105,31 +110,63 @@ def _drf(problem: AllocationProblem, **kw) -> Tuple[Allocation, SolveInfo]:
     # closed form: sweep kwargs (tol, max_rounds, ...) have nothing to
     # control, but the Allocator contract accepts them so callers can sweep
     # mechanisms with shared solver options
-    return solve_drf_pooled(problem)
+    _reject_placement(kw, "drf")
+    alloc, info = solve_drf_pooled(problem)
+    info.stranded_frac = stranded_fraction(alloc.problem, alloc.x)
+    return alloc, info
 
 
 @register_allocator("uniform")
 def _uniform(problem: AllocationProblem, **kw
              ) -> Tuple[Allocation, SolveInfo]:
-    return uniform_allocation(problem), SolveInfo(1, True, 0.0)
+    _reject_placement(kw, "uniform")
+    alloc = uniform_allocation(problem)
+    return alloc, SolveInfo(1, True, 0.0,
+                            stranded_frac=stranded_fraction(problem, alloc.x))
+
+
+def _reject_placement(kw: dict, mechanism: str) -> None:
+    """Closed-form mechanisms have no placement freedom: drf solves a
+    pooled relaxation, uniform IS a fixed placement. Accept only the
+    default strategy so a routing request cannot be silently ignored."""
+    placement = kw.pop("placement", "level")
+    get_placement(placement)
+    if placement != "level":
+        raise ValueError(
+            f"mechanism {mechanism!r} is closed-form and has no placement "
+            f"freedom; only placement='level' is accepted, got {placement!r}")
 
 
 def solve(problem: AllocationProblem, mechanism: str = "psdsf-rdm",
-          backend: str = "numpy", **kw) -> Tuple[Allocation, SolveInfo]:
-    """One-call entry point: registry lookup + optional jitted backend."""
+          backend: str = "numpy", placement: str = "level",
+          **kw) -> Tuple[Allocation, SolveInfo]:
+    """One-call entry point: registry lookup + optional jitted backend.
+
+    ``placement`` selects the routing strategy for sweep mechanisms (see
+    ``core.placement``); the jax backend mirrors the strategies flagged
+    ``jax_backend`` in the registry (level, headroom — bestfit is
+    numpy-only).
+    """
     if backend not in ("numpy", "jax"):
         raise ValueError(f"backend must be 'numpy' or 'jax': {backend!r}")
+    strategy = get_placement(placement)
     if backend == "jax" and mechanism in SWEEP_MECHANISMS:
+        if not strategy.jax_backend:
+            raise ValueError(
+                f"placement {placement!r} has no jitted mirror; use "
+                f"backend='numpy' or a jax_backend strategy")
         if mechanism in ("psdsf-rdm", "psdsf-tdm"):
-            return _solve_psdsf_via_jax(problem, mechanism, **kw)
+            return _solve_psdsf_via_jax(problem, mechanism,
+                                        placement=placement, **kw)
         from .baselines_jax import solve_baseline_jax
-        return solve_baseline_jax(problem, mechanism, **kw)
-    return get_allocator(mechanism)(problem, **kw)
+        return solve_baseline_jax(problem, mechanism, placement=placement,
+                                  **kw)
+    return get_allocator(mechanism)(problem, placement=placement, **kw)
 
 
 def _solve_psdsf_via_jax(problem: AllocationProblem, mechanism: str, x0=None,
                          max_rounds: int = 256, tol: float = 1e-6,
-                         loose_tol: float = 5e-3
+                         loose_tol: float = 5e-3, placement: str = "level"
                          ) -> Tuple[Allocation, SolveInfo]:
     import jax.numpy as jnp
     import numpy as np
@@ -143,8 +180,11 @@ def _solve_psdsf_via_jax(problem: AllocationProblem, mechanism: str, x0=None,
         jnp.asarray(problem.weights), jnp.asarray(g),
         x0=None if x0 is None else jnp.asarray(x0),
         mode="rdm" if mechanism == "psdsf-rdm" else "tdm",
-        max_rounds=max_rounds, tol=tol)
-    return (Allocation(problem, np.asarray(x, dtype=np.float64)),
+        max_rounds=max_rounds, tol=tol, placement=placement)
+    x = np.asarray(x, dtype=np.float64)
+    return (Allocation(problem, x),
             SolveInfo.from_residual(int(rounds), float(resid),
                                     float(g.max(initial=1.0)), tol,
-                                    loose_tol))
+                                    loose_tol, placement=placement,
+                                    stranded_frac=stranded_fraction(
+                                        problem, x, gamma=g)))

@@ -141,6 +141,27 @@ def fault_scenarios(problem: AllocationProblem, home: np.ndarray,
     return out
 
 
+def dense_random_instance(num_users: int = 60, num_servers: int = 12,
+                          num_resources: int = 4, elig_frac: float = 0.7,
+                          seed: int = 0) -> AllocationProblem:
+    """The dense contended instance the placement strategies are pinned on.
+
+    Dense random eligibility (each (user, server) pair eligible with
+    probability ``elig_frac``) with heterogeneous demand mixes — the regime
+    where the mix-oblivious per-server level fill strands roughly 2x the
+    capacity greedy best-fit placement recovers (ROADMAP PR 2 note). Used
+    by tests/test_placement.py and the ``placement_comparison`` benchmark;
+    change it and both pins move together.
+    """
+    rng = np.random.default_rng(seed)
+    return AllocationProblem(
+        demands=rng.uniform(0.05, 2.0, (num_users, num_resources)),
+        capacities=rng.uniform(5.0, 50.0, (num_servers, num_resources)),
+        weights=rng.uniform(0.5, 2.0, num_users),
+        eligibility=(rng.random((num_users, num_servers))
+                     > 1.0 - elig_frac).astype(float))
+
+
 def fig1_instance() -> AllocationProblem:
     return AllocationProblem(
         demands=np.array([[1.0, 2.0, 10.0], [1.0, 2.0, 1.0],

@@ -19,230 +19,30 @@ Two solvers for the RDM regime:
 
 ``solve_psdsf_tdm`` handles the TDM regime (Eq. 10): one virtual time-share
 resource per server makes the per-server fill closed-form.
+
+The saturation-event fills themselves (``server_fill_rdm`` /
+``server_fill_tdm``), the Gauss-Seidel outer loop (``sweep_fixed_point``)
+and the ``SolveInfo`` contract live in ``placement`` — the placement layer
+shared with the baseline mechanisms — and are re-exported here unchanged.
+Both solvers accept ``placement=`` ("level" is the paper-exact default;
+"headroom"/"bestfit" run repack-and-refill passes around the fixed point,
+see ``placement.repack_refill``).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import numpy as np
 
 from .gamma import gamma_matrix
+from .placement import (SolveInfo, server_fill_rdm, server_fill_tdm,
+                        solve_with_placement, sweep_fixed_point)
 from .types import Allocation, AllocationProblem
 
-_TOL = 1e-9
-
-
-# ---------------------------------------------------------------------------
-# Per-server progressive fill (the "server procedure", rebuilt from scratch)
-# ---------------------------------------------------------------------------
-
-def server_fill_rdm(
-    cap: np.ndarray,          # (R,) capacities of this server
-    demands: np.ndarray,      # (N, R)
-    phi: np.ndarray,          # (N,)
-    gamma_i: np.ndarray,      # (N,) gamma w.r.t. this server
-    x_ext: np.ndarray,        # (N,) tasks user holds on OTHER servers
-) -> np.ndarray:
-    """Max-min fill of normalized VDS at one server given external floors.
-
-    Returns x_i (N,), the tasks allocated from this server.
-
-    Water level L == normalized VDS == (x_ext_n + x_i_n) / (phi_n gamma_i_n).
-    While filling, user n with floor f_n = x_ext_n / (phi_n gamma_i_n) grows as
-        x_i_n(L) = phi_n gamma_i_n * max(0, L - f_n),
-    i.e. rate phi_n gamma_i_n per unit level. When resource r saturates, every
-    active user with d[n, r] > 0 acquires bottleneck r (Corollary 1) and is
-    removed from the active set (Eq. 17). Terminates after <= R saturations.
-    """
-    n_users, n_res = demands.shape
-    x_i = np.zeros(n_users)
-    eligible = gamma_i > 0
-    if not eligible.any():
-        return x_i
-
-    rate = np.where(eligible, phi * gamma_i, 0.0)                # dx/dL
-    with np.errstate(divide="ignore", invalid="ignore"):
-        floor = np.where(eligible, x_ext / np.maximum(rate, 1e-300), np.inf)
-
-    active = eligible.copy()
-    frozen_usage = np.zeros(n_res)
-    saturated = cap <= _TOL * max(1.0, cap.max(initial=1.0))     # zero-capacity
-    level = 0.0
-
-    for _ in range(n_res + 1):
-        if not active.any():
-            break
-        # Piecewise-linear usage_r(L); find the first saturation level.
-        act_idx = np.nonzero(active)[0]
-        f = floor[act_idx]
-        rt = rate[act_idx]
-        dm = demands[act_idx]                                     # (A, R)
-        order = np.argsort(f, kind="stable")
-        f_s, rt_s, dm_s = f[order], rt[order], dm[order]
-        slope_contrib = dm_s * rt_s[:, None]                      # (A, R)
-        # usage_r(L) = frozen + sum_{j: f_j <= L} slope_j_r * (L - f_j)
-        cum_slope = np.cumsum(slope_contrib, axis=0)              # after k-th joins
-        cum_sf = np.cumsum(slope_contrib * f_s[:, None], axis=0)
-        # usage at candidate level equal to each breakpoint f_k (just after join)
-        usage_at_bp = cum_slope * f_s[:, None] - cum_sf + frozen_usage[None, :]
-        headroom = cap[None, :] - usage_at_bp                     # (A, R)
-        # For each resource: the earliest segment where usage crosses cap.
-        best_level = np.inf
-        bind_resources: list[int] = []
-        for r in range(n_res):
-            if saturated[r]:
-                continue
-            if cum_slope[-1, r] <= _TOL and frozen_usage[r] <= cap[r] - _TOL:
-                continue  # nobody active demands r -> can't bind
-            # find smallest k such that crossing occurs in segment [f_k, f_{k+1})
-            lr = np.inf
-            for k in range(len(f_s)):
-                if cum_slope[k, r] <= 1e-300:
-                    continue
-                cand = f_s[k] + (cap[r] - usage_at_bp[k, r]) / cum_slope[k, r]
-                nxt = f_s[k + 1] if k + 1 < len(f_s) else np.inf
-                if cand <= nxt + _TOL:
-                    lr = max(cand, f_s[k])
-                    break
-            if lr < best_level - _TOL:
-                best_level = lr
-                bind_resources = [r]
-            elif lr < best_level + _TOL:
-                bind_resources.append(r)
-        if not np.isfinite(best_level):
-            # No resource can bind (all active users' demanded resources have
-            # unlimited headroom) — cannot happen with finite gamma.
-            raise RuntimeError("server_fill_rdm: unbounded fill")
-        # The level is non-decreasing across saturation events; clamp to guard
-        # against round-off re-binding below the current water level.
-        level = max(best_level, level)
-        x_i[act_idx] = rt * np.maximum(0.0, level - f)
-        # freeze users demanding any binding resource (Eq. 17)
-        newly_frozen = np.zeros(n_users, dtype=bool)
-        for r in bind_resources:
-            saturated[r] = True
-            newly_frozen |= active & (demands[:, r] > 0)
-        frozen_usage = frozen_usage + np.einsum(
-            "n,nr->r", x_i * newly_frozen, demands)
-        active &= ~newly_frozen
-        # users still active: recompute nothing — their x continues from level
-        # (handled by floors: they keep filling from `level`, but their already
-        #  assigned x_i is consistent with x_i(L) formula, so just continue).
-    return x_i
-
-
-def server_fill_tdm(
-    demands: np.ndarray,      # unused except for shape (kept for symmetry)
-    phi: np.ndarray,
-    gamma_i: np.ndarray,
-    x_ext: np.ndarray,
-) -> np.ndarray:
-    """TDM fill: one virtual resource, sum_n x[n,i]/gamma[n,i] <= 1 (Eq. 10).
-
-    usage(L) = sum_n phi_n * max(0, L - f_n) = 1. Closed-form by sweeping the
-    sorted floors.
-    """
-    n_users = phi.shape[0]
-    x_i = np.zeros(n_users)
-    eligible = gamma_i > 0
-    if not eligible.any():
-        return x_i
-    act = np.nonzero(eligible)[0]
-    rate = phi[act]                                  # d(x/gamma)/dL = phi
-    floor = x_ext[act] / (phi[act] * gamma_i[act])
-    order = np.argsort(floor, kind="stable")
-    f_s, rt_s = floor[order], rate[order]
-    cum_rt = np.cumsum(rt_s)
-    cum_rf = np.cumsum(rt_s * f_s)
-    usage_at_bp = cum_rt * f_s - cum_rf              # time-share used at L=f_k
-    level = np.inf
-    for k in range(len(f_s)):
-        cand = f_s[k] + (1.0 - usage_at_bp[k]) / cum_rt[k]
-        nxt = f_s[k + 1] if k + 1 < len(f_s) else np.inf
-        if cand <= nxt + _TOL:
-            level = max(cand, f_s[k])
-            break
-    x_i[act] = phi[act] * gamma_i[act] * np.maximum(0.0, level - floor)
-    return x_i
-
-
-# ---------------------------------------------------------------------------
-# Outer loop: synchronous sweep of the distributed server procedure
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class SolveInfo:
-    rounds: int
-    converged: bool
-    residual: float
-    approx: bool = False     # converged only to the loose tolerance
-
-    @classmethod
-    def from_residual(cls, rounds: int, residual: float, scale: float,
-                      tol: float, loose_tol: float = 5e-3) -> "SolveInfo":
-        """The acceptance contract applied to a raw (rounds, residual) pair
-        — the single place the tight/loose bands are derived, shared by the
-        jitted solver wrappers so the psdsf and baseline paths cannot
-        drift."""
-        scale = max(1.0, scale)
-        converged = residual <= tol * scale
-        approx = not converged and residual <= loose_tol * scale
-        return cls(rounds, converged or approx, residual, approx=approx)
-
-
-def sweep_fixed_point(
-    fill_server,             # (i, x_ext) -> x_i (N,), the per-server rebuild
-    num_users: int,
-    num_servers: int,
-    scale: float,
-    x0: Optional[np.ndarray] = None,
-    max_rounds: int = 600,
-    tol: float = 1e-8,
-    loose_tol: float = 5e-3,
-    adaptive_damping: bool = True,
-) -> tuple[np.ndarray, SolveInfo]:
-    """Gauss-Seidel sweep of per-server rebuilds to a fixed point.
-
-    The shared outer loop behind every progressive-fill mechanism in the
-    repo: PS-DSF RDM/TDM (levels normalized by the per-server gamma) and the
-    exact baselines (levels normalized by a server-independent score weight).
-
-    Convergence of the iterated server procedure is an OPEN question the
-    paper defers to future work (footnote 5). Empirically: every instance in
-    the paper converges exactly in <= 5 rounds; large adversarial random
-    instances can enter small limit cycles (~0.3% of gamma-scale). We
-    mitigate with adaptive damping (x <- (1-a) x + a rebuild(x), shrinking a
-    when the residual stalls) and report ``approx=True`` when only the loose
-    tolerance (default 0.5% of scale) is met — immaterial for scheduling but
-    recorded honestly. The row sums feeding each fill's external floors are
-    maintained incrementally (one O(NK) reduction per round, not per server).
-    """
-    n, k = num_users, num_servers
-    x = np.zeros((n, k)) if x0 is None else np.array(x0, dtype=np.float64)
-    scale = max(1.0, scale)
-    resid = np.inf
-    prev_resid = np.inf
-    alpha = 1.0
-    for rounds in range(1, max_rounds + 1):
-        x_prev = x.copy()
-        xsum = x.sum(axis=1)
-        for i in range(k):
-            x_ext = xsum - x[:, i]
-            xi = (1.0 - alpha) * x[:, i] + alpha * fill_server(i, x_ext)
-            xsum += xi - x[:, i]
-            x[:, i] = xi
-        resid = float(np.abs(x - x_prev).max())
-        if resid <= tol * scale:
-            return x, SolveInfo(rounds, True, resid)
-        # only damp once the sweep has clearly stalled (paper instances
-        # converge exactly within a handful of undamped rounds)
-        if (adaptive_damping and rounds >= 8
-                and resid > 0.98 * prev_resid and alpha > 0.15):
-            alpha *= 0.7
-        prev_resid = resid
-    approx = resid <= loose_tol * scale
-    return x, SolveInfo(max_rounds, approx, resid, approx=approx)
+__all__ = [
+    "SolveInfo", "server_fill_rdm", "server_fill_tdm", "sweep_fixed_point",
+    "solve_psdsf_rdm", "solve_psdsf_tdm", "algorithm1_literal",
+]
 
 
 def solve_psdsf_rdm(
@@ -252,20 +52,18 @@ def solve_psdsf_rdm(
     tol: float = 1e-8,
     loose_tol: float = 5e-3,
     adaptive_damping: bool = True,
+    placement: str = "level",
+    server_order: str = "fixed",
 ) -> tuple[Allocation, SolveInfo]:
     """PS-DSF under RDM: sweep servers until fixed point of the rebuild map
-    (see ``sweep_fixed_point`` for the damping/acceptance contract)."""
+    (see ``placement.sweep_fixed_point`` for the damping/acceptance
+    contract and ``placement.solve_with_placement`` for the strategies)."""
     g = gamma_matrix(problem)
-
-    def fill(i, x_ext):
-        return server_fill_rdm(problem.capacities[i], problem.demands,
-                               problem.weights, g[:, i], x_ext)
-
-    x, info = sweep_fixed_point(
-        fill, problem.num_users, problem.num_servers, g.max(initial=1.0),
-        x0=x0, max_rounds=max_rounds, tol=tol, loose_tol=loose_tol,
-        adaptive_damping=adaptive_damping)
-    return Allocation(problem, x), info
+    return solve_with_placement(
+        problem, g, placement=placement, mode="rdm", per_server_rates=True,
+        scale=g.max(initial=1.0), x0=x0, max_rounds=max_rounds, tol=tol,
+        loose_tol=loose_tol, adaptive_damping=adaptive_damping,
+        server_order=server_order)
 
 
 def solve_psdsf_tdm(
@@ -275,20 +73,17 @@ def solve_psdsf_tdm(
     tol: float = 1e-8,
     loose_tol: float = 5e-3,
     adaptive_damping: bool = True,
+    placement: str = "level",
+    server_order: str = "fixed",
 ) -> tuple[Allocation, SolveInfo]:
     """PS-DSF under TDM (Def. 4 feasibility). Same adaptive damping and
     approximate-convergence contract as the RDM solver."""
     g = gamma_matrix(problem)
-
-    def fill(i, x_ext):
-        return server_fill_tdm(problem.demands, problem.weights, g[:, i],
-                               x_ext)
-
-    x, info = sweep_fixed_point(
-        fill, problem.num_users, problem.num_servers, g.max(initial=1.0),
-        x0=x0, max_rounds=max_rounds, tol=tol, loose_tol=loose_tol,
-        adaptive_damping=adaptive_damping)
-    return Allocation(problem, x), info
+    return solve_with_placement(
+        problem, g, placement=placement, mode="tdm", per_server_rates=True,
+        scale=g.max(initial=1.0), x0=x0, max_rounds=max_rounds, tol=tol,
+        loose_tol=loose_tol, adaptive_damping=adaptive_damping,
+        server_order=server_order)
 
 
 # ---------------------------------------------------------------------------

@@ -186,10 +186,111 @@ def _solve_dtype(demands):
     return jnp.float64 if demands.dtype == jnp.float64 else jnp.float32
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "max_rounds"))
+# ---------------------------------------------------------------------------
+# Placement mirrors: stranded fraction, repack-and-refill (headroom)
+# ---------------------------------------------------------------------------
+
+def stranded_fraction_jnp(demands, capacities, gamma, x):
+    """jnp twin of ``placement.stranded_fraction``: fraction of demandable
+    capacity (cap > 0 and some eligible user demands the resource) left
+    unused by ``x``."""
+    dt = x.dtype
+    wanted = (gamma > 0).astype(dt).T @ (demands > 0).astype(dt)
+    mask = ((capacities > 0) & (wanted > 0)).astype(dt)
+    total = (capacities * mask).sum()
+    usage = jnp.einsum("nk,nr->kr", x, demands)
+    used = (usage * mask).sum()
+    frac = 1.0 - jnp.minimum(used / jnp.maximum(total, 1e-300), 1.0)
+    return jnp.where(total > 0, frac, 0.0)
+
+
+def _repack_core(x, demands, capacities, weights, level_gamma, mode):
+    """jnp twin of ``placement.repack_pass`` (proportional rule only —
+    bestfit's greedy repack is numpy-only): drain each user largest-first
+    and re-split its total across eligible servers in proportion to the
+    freed headroom. Totals are preserved exactly; the proportional split is
+    feasible whenever the drained placement was (kept unchanged otherwise).
+    """
+    del weights   # the repack moves tasks; rates don't enter
+    n, k = x.shape
+    eligible = level_gamma > 0
+    if mode == "rdm":
+        free0 = capacities - jnp.einsum("nk,nr->kr", x, demands)
+    else:
+        inv_g = jnp.where(eligible,
+                          1.0 / jnp.maximum(level_gamma, 1e-300), 0.0)
+        free0 = 1.0 - jnp.einsum("nk,nk->k", x, inv_g)       # (K,) share slack
+    order = jnp.argsort(-x.sum(axis=1), stable=True)
+
+    def body(j, carry):
+        x, free = carry
+        u = order[j]
+        xu = x[u]
+        du = demands[u]
+        if mode == "rdm":
+            free = free + xu[:, None] * du[None, :]                # drain
+            ratio = jnp.where(du[None, :] > 0,
+                              free / jnp.maximum(du, 1e-300)[None, :], _BIG)
+            h = jnp.where(eligible[u], ratio.min(axis=1), 0.0)
+        else:
+            free = free + xu * inv_g[u]
+            h = jnp.where(eligible[u],
+                          level_gamma[u] * jnp.maximum(free, 0.0), 0.0)
+        h = jnp.maximum(h, 0.0)
+        t_u = xu.sum()
+        hs = h.sum()
+        xnew = jnp.where((t_u > 0) & (hs >= t_u),
+                         t_u * h / jnp.maximum(hs, 1e-300), xu)
+        free = (free - xnew[:, None] * du[None, :] if mode == "rdm"
+                else free - xnew * inv_g[u])
+        return x.at[u].set(xnew), free
+
+    x, _ = jax.lax.fori_loop(0, n, body, (x, free0))
+    return x
+
+
+def _repack_refill_core(demands, capacities, weights, gamma, x, rounds,
+                        resid, mode, max_rounds, tol, passes=3,
+                        min_gain=1e-6, loose_tol=5e-3):
+    """Headroom placement for PS-DSF: improve a level fixed point with up to
+    ``passes`` repack + warm-refill rounds, keeping a round only when the
+    refill re-certifies and the stranded fraction measurably drops (the
+    jnp mirror of ``placement.repack_refill``). Acceptance matches the
+    numpy contract — tight OR loose convergence counts (``SolveInfo``'s
+    ``converged`` includes ``approx``), so limit-cycling instances accept
+    the same refills on both backends. Returns the accepted
+    (x, rounds, resid)."""
+    scale = jnp.maximum(1.0, gamma.max())
+    s0 = stranded_fraction_jnp(demands, capacities, gamma, x)
+
+    def body(_, carry):
+        x_b, s_b, rounds_b, resid_b = carry
+        xr = _repack_core(x_b, demands, capacities, weights, gamma, mode)
+        x2, r2, res2 = _solve_core(demands, capacities, weights, gamma, xr,
+                                   mode, max_rounds, tol)
+        s2 = stranded_fraction_jnp(demands, capacities, gamma, x2)
+        accept_tol = jnp.maximum(tol, loose_tol)
+        ok = (res2 <= accept_tol * scale) & (s2 < s_b - min_gain)
+        return (jnp.where(ok, x2, x_b), jnp.where(ok, s2, s_b),
+                jnp.where(ok, r2, rounds_b), jnp.where(ok, res2, resid_b))
+
+    x, _, rounds, resid = jax.lax.fori_loop(
+        0, passes, body, (x, s0, rounds, resid))
+    return x, rounds, resid
+
+
+def _check_placement(placement: str) -> None:
+    from .placement import get_placement
+    if not get_placement(placement).jax_backend:
+        raise ValueError(f"placement {placement!r} has no jitted mirror "
+                         f"(numpy engine only)")
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "max_rounds", "placement"))
 def psdsf_solve_jax(demands, capacities, weights, gamma, *, x0=None,
                     mode: str = "rdm", max_rounds: int = 256,
-                    tol: float = 1e-6):
+                    tol: float = 1e-6, placement: str = "level"):
     """Solve PS-DSF. Returns (x (N,K), rounds, residual).
 
     ``gamma`` is the (N, K) eligibility-masked monopolization matrix; compute
@@ -202,19 +303,29 @@ def psdsf_solve_jax(demands, capacities, weights, gamma, *, x0=None,
     ``x0`` (N, K) warm-starts the sweep (e.g. the pre-churn fixed point);
     the rebuild map's fixed points do not depend on the starting point, so a
     warm start changes only the round count, not the solution.
+
+    ``placement="headroom"`` follows the level solve with jitted
+    repack-and-refill passes (``_repack_refill_core``); ``"bestfit"`` is
+    numpy-only and rejected here.
     """
+    _check_placement(placement)
     n, k = gamma.shape
     dtype = _solve_dtype(demands)
     if x0 is None:
         x0 = jnp.zeros((n, k), dtype=dtype)
-    return _solve_core(demands, capacities, weights, gamma,
-                       x0.astype(dtype), mode, max_rounds, tol)
+    out = _solve_core(demands, capacities, weights, gamma,
+                      x0.astype(dtype), mode, max_rounds, tol)
+    if placement == "headroom":
+        out = _repack_refill_core(demands, capacities, weights, gamma, *out,
+                                  mode, max_rounds, tol)
+    return out
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "max_rounds"))
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "max_rounds", "placement"))
 def psdsf_solve_batched(demands, capacities, weights, gamma, *, x0=None,
                         mode: str = "rdm", max_rounds: int = 256,
-                        tol: float = 1e-6):
+                        tol: float = 1e-6, placement: str = "level"):
     """Solve B independent PS-DSF problems in one jitted call.
 
     Shapes: demands (B, N, R), capacities (B, K, R), weights (B, N),
@@ -223,22 +334,30 @@ def psdsf_solve_batched(demands, capacities, weights, gamma, *, x0=None,
     converged problem's carry stops updating under the vmapped while_loop).
 
     Pad heterogeneous problems with ``batch_problems``; padding is inert
-    (see module docstring).
+    (see module docstring). ``placement`` as in ``psdsf_solve_jax``.
     """
+    _check_placement(placement)
     b, n, k = gamma.shape
     dtype = _solve_dtype(demands)
     if x0 is None:
         x0 = jnp.zeros((b, n, k), dtype=dtype)
-    solve = functools.partial(_solve_core, mode=mode, max_rounds=max_rounds,
-                              tol=tol)
+
+    def solve(d, c, w, g, x0_):
+        out = _solve_core(d, c, w, g, x0_, mode, max_rounds, tol)
+        if placement == "headroom":
+            out = _repack_refill_core(d, c, w, g, *out, mode, max_rounds,
+                                      tol)
+        return out
+
     return jax.vmap(solve)(demands, capacities, weights, gamma,
                            x0.astype(dtype))
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "max_rounds"))
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "max_rounds", "placement"))
 def psdsf_resolve_batched(demands, capacities, weights, gamma, x0, servers, *,
                           mode: str = "rdm", max_rounds: int = 64,
-                          tol: float = 1e-4):
+                          tol: float = 1e-4, placement: str = "level"):
     """Event-driven incremental re-solve of B perturbed problems.
 
     ``servers`` (B, S) int32 lists the servers each scenario's events touch
@@ -252,7 +371,12 @@ def psdsf_resolve_batched(demands, capacities, weights, gamma, x0, servers, *,
     Returns (x, rounds_restricted, rounds_full, residual); the residual is
     the full-sweep one. Cost ~ S/K per restricted round, which is where the
     engine's throughput over cold full solves comes from.
+
+    ``placement="headroom"`` appends repack-and-refill passes after the
+    verification sweep (full sweeps — the repack is global by nature).
     """
+    _check_placement(placement)
+
     def one(d, c, w, g, x0_, srv):
         # The warm start is near the fixed point; alpha0 = 0.3 is enough to
         # absorb a cell-local perturbation in a few sweeps without fully
@@ -266,6 +390,9 @@ def psdsf_resolve_batched(demands, capacities, weights, gamma, x0, servers, *,
         # an undamped full sweep here would just re-excite the limit cycle.
         x, r_full, resid = _solve_core(d, c, w, g, x, mode, max_rounds, tol,
                                        alpha0=0.02)
+        if placement == "headroom":
+            x, r_full, resid = _repack_refill_core(
+                d, c, w, g, x, r_full, resid, mode, max_rounds, tol)
         return x, r_restricted, r_full, resid
 
     return jax.vmap(one)(demands, capacities, weights, gamma,

@@ -77,7 +77,11 @@ class ChurnSimulator:
     the jitted JAX path; set ``compare_cold=True`` to also run each re-solve
     cold and record the round-count gap (used by the ``dynamic_churn``
     benchmark row). ``mode`` ("rdm"/"tdm") is the legacy PS-DSF-regime
-    spelling, kept as an alias.
+    spelling, kept as an alias. ``placement`` selects the routing strategy
+    per tick ("level" or "headroom" — the jitted mirrors; "bestfit" is
+    numpy-only and rejected): headroom re-routes via the one-shot global
+    fill (global-share mechanisms; inherently cold) or repack-and-refill
+    passes after the warm sweep (PS-DSF).
     """
 
     def __init__(self, problem: AllocationProblem, mode: Optional[str] = None,
@@ -85,8 +89,10 @@ class ChurnSimulator:
                  max_rounds: int = 256, tol: float = 1e-6,
                  initial_active: Optional[np.ndarray] = None,
                  telemetry: bool = True, interpret_vds: bool = True,
-                 mechanism: Optional[str] = None):
+                 mechanism: Optional[str] = None, placement: str = "level"):
         import jax.numpy as jnp
+
+        from repro.core.placement import get_placement
 
         if mode is not None and mechanism is not None:
             raise ValueError(
@@ -101,8 +107,13 @@ class ChurnSimulator:
             raise ValueError(
                 f"mechanism must be sweep-based, one of "
                 f"{TICKABLE_MECHANISMS}: {mechanism!r}")
+        if not get_placement(placement).jax_backend:
+            raise ValueError(
+                f"the churn tick runs on the jitted engine; placement "
+                f"{placement!r} has no jitted mirror (numpy only)")
         self.problem = problem
         self.mechanism = mechanism
+        self.placement = placement
         self.warm_start = warm_start
         self.compare_cold = compare_cold
         self.max_rounds = max_rounds
@@ -141,7 +152,7 @@ class ChurnSimulator:
             jnp.asarray(self.active), jnp.asarray(self.cap_scale, jnp.float32),
             None if x0 is None else jnp.asarray(x0, jnp.float32),
             mechanism=self.mechanism, max_rounds=self.max_rounds,
-            tol=self.tol)
+            tol=self.tol, placement=self.placement)
         return np.array(x, dtype=np.float64), int(rounds), float(resid)
 
     def step(self, events: Sequence[ChurnEvent], time_now: float
@@ -201,23 +212,29 @@ class ChurnSimulator:
 @_functools.lru_cache(maxsize=1)
 def _resolve_fn():
     """Jitted: effective capacities -> level-rate matrix for the chosen
-    mechanism -> warm-started sweep. Cached so all simulator instances share
-    one jit cache (one compilation per (mechanism, shapes))."""
+    mechanism -> warm-started sweep (or the routed/repacked placement
+    mirrors when ``placement="headroom"``). Cached so all simulator
+    instances share one jit cache (one compilation per (mechanism,
+    placement, shapes))."""
     import functools
 
     import jax.numpy as jnp
     import jax
 
-    from repro.core.baselines_jax import level_rate_matrix_jnp
-    from repro.core.psdsf_jax import _solve_core, gamma_matrix_jnp
+    from repro.core.baselines_jax import (_routed_fill_core,
+                                          level_rate_matrix_jnp)
+    from repro.core.psdsf_jax import (_repack_refill_core, _solve_core,
+                                      gamma_matrix_jnp)
 
-    @functools.partial(jax.jit, static_argnames=("mechanism", "max_rounds"))
+    @functools.partial(jax.jit, static_argnames=("mechanism", "max_rounds",
+                                                 "placement"))
     def resolve(demands, capacities, weights, eligibility, active, cap_scale,
-                x0, *, mechanism, max_rounds, tol):
+                x0, *, mechanism, max_rounds, tol, placement="level"):
         caps_eff = capacities * cap_scale[:, None]
         g = gamma_matrix_jnp(demands, caps_eff, eligibility)
         g = jnp.where(active[:, None], g, 0.0)
-        if mechanism in ("psdsf-rdm", "psdsf-tdm"):
+        psdsf = mechanism in ("psdsf-rdm", "psdsf-tdm")
+        if psdsf:
             lg = g
             mode = mechanism.removeprefix("psdsf-")
         else:
@@ -225,14 +242,22 @@ def _resolve_fn():
                                        mechanism)
             lg = jnp.where(active[:, None], lg, 0.0)
             mode = "rdm"
+        if placement == "headroom" and not psdsf:
+            # global-share mechanisms route via the one-shot exact fill;
+            # there is no fixed point to warm-start
+            return _routed_fill_core(demands, caps_eff, weights, lg)
         if x0 is None:
             x0 = jnp.zeros(lg.shape, dtype=demands.dtype)
         x0 = jnp.where(active[:, None], x0, 0.0)
         # acceptance band always on the ACTIVE users' per-server gamma scale
         # (the baseline level rates sum gamma over servers — see
         # baselines_jax; and a departed huge-gamma user must not loosen it)
-        return _solve_core(demands, caps_eff, weights, lg, x0, mode,
-                           max_rounds, tol, scale=g.max())
+        out = _solve_core(demands, caps_eff, weights, lg, x0, mode,
+                          max_rounds, tol, scale=g.max())
+        if placement == "headroom":
+            out = _repack_refill_core(demands, caps_eff, weights, g, *out,
+                                      mode, max_rounds, tol)
+        return out
 
     return resolve
 

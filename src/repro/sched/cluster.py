@@ -116,8 +116,9 @@ class Cluster:
     def problem(self, jobs: Sequence[TenantJob]) -> AllocationProblem:
         demands = np.stack([j.demand() for j in jobs])
         caps = np.stack([p.capacity() for p in self.pods])
-        # Eligibility built column-vectorized over pods (no jobs x pods
-        # Python double loop): each constraint is one broadcast predicate.
+        # Eligibility fully vectorized over jobs x pods (no per-job Python
+        # loop): each constraint is one broadcast predicate, including the
+        # generation allow-list via np.isin over a padded allow-list array.
         hbm_pc = np.array([p.hbm_gb_per_chip for p in self.pods])
         dcn = np.array([p.dcn_gbps for p in self.pods])
         gens = np.array([p.generation for p in self.pods])
@@ -125,19 +126,43 @@ class Cluster:
         needs_dcn = np.array([j.needs_dcn for j in jobs])
         elig = (hbm_pc[None, :] >= min_hbm[:, None]).astype(float)
         elig *= ~needs_dcn[:, None] | (dcn[None, :] > 0)
-        for ji, j in enumerate(jobs):
-            if j.generations:
-                allowed = ([j.generations] if isinstance(j.generations, str)
-                           else list(j.generations))
-                elig[ji] *= np.isin(gens, allowed)
+        elig *= _generation_allowed(jobs, gens)
         weights = np.array([j.weight for j in jobs])
         return AllocationProblem(demands, caps, weights, elig)
 
 
+def _generation_allowed(jobs: Sequence[TenantJob],
+                        gens: np.ndarray) -> np.ndarray:
+    """(J, K) 0/1: pod generation passes each job's allow-list.
+
+    Allow-lists (tuples/lists or a plain str) are right-padded to a
+    (J, G_max) array so one ``np.isin``-style broadcast comparison covers
+    every job at once; a validity mask keeps padding slots inert no matter
+    what string a pod's generation is. Jobs with no allow-list — None, an
+    empty sequence, or an empty string, exactly the falsy values
+    ``TenantJob.eligible`` treats as unrestricted — accept every
+    generation.
+    """
+    allow = [([j.generations] if isinstance(j.generations, str)
+              else list(j.generations)) if j.generations else []
+             for j in jobs]
+    g_max = max((len(a) for a in allow), default=0)
+    if g_max == 0:
+        return np.ones((len(jobs), gens.shape[0]))
+    padded = np.array([a + [""] * (g_max - len(a)) for a in allow])  # (J, G)
+    lengths = np.array([len(a) for a in allow])
+    valid = np.arange(g_max)[None, :] < lengths[:, None]             # (J, G)
+    # np.isin(gens, padded[j]) for all j at once: (J, K, G) equality reduce
+    match = ((gens[None, :, None] == padded[:, None, :])
+             & valid[:, None, :]).any(axis=2)
+    return (match | (lengths == 0)[:, None]).astype(float)
+
+
 def _solve_placed(cluster: Cluster, jobs: Sequence[TenantJob],
-                  mechanism: str, solver_kw):
+                  mechanism: str, placement: str, solver_kw):
     prob = cluster.problem(jobs)
-    alloc, info = get_allocator(mechanism)(prob, **solver_kw)
+    alloc, info = get_allocator(mechanism)(prob, placement=placement,
+                                           **solver_kw)
     ensure_converged(info, what=f"{mechanism} on cluster problem")
     # Pooled mechanisms (drf) solve a relaxation that DROPS the placement
     # constraints (generation allow-list, min HBM/chip, DCN) — their quotas
@@ -146,17 +171,23 @@ def _solve_placed(cluster: Cluster, jobs: Sequence[TenantJob],
         raise ValueError(
             f"mechanism {mechanism!r} solves a pooled relaxation that drops "
             f"placement constraints; pick a placement-aware allocator")
-    return alloc
+    return alloc, info
 
 
 def schedule(cluster: Cluster, jobs: Sequence[TenantJob],
-             mechanism: str = "psdsf-rdm", **solver_kw) -> Dict[str, float]:
+             mechanism: str = "psdsf-rdm", placement: str = "level",
+             **solver_kw) -> Dict[str, float]:
     """Replica counts per job (continuous; launcher floors) under any
-    registered placement-aware allocator (default PS-DSF/RDM)."""
-    alloc = _solve_placed(cluster, jobs, mechanism, solver_kw)
+    registered placement-aware allocator (default PS-DSF/RDM) and any
+    placement strategy (see ``repro.core.placement``; default the
+    mechanisms' exact level fill)."""
+    alloc, _ = _solve_placed(cluster, jobs, mechanism, placement, solver_kw)
     return {j.name: float(x) for j, x in zip(jobs, alloc.tasks_per_user)}
 
 
 def schedule_detail(cluster: Cluster, jobs: Sequence[TenantJob],
-                    mechanism: str = "psdsf-rdm", **solver_kw):
-    return _solve_placed(cluster, jobs, mechanism, solver_kw)
+                    mechanism: str = "psdsf-rdm", placement: str = "level",
+                    **solver_kw):
+    """Full ``(Allocation, SolveInfo)`` — the info records the placement
+    strategy and the stranded-capacity fraction of the layout."""
+    return _solve_placed(cluster, jobs, mechanism, placement, solver_kw)

@@ -64,13 +64,17 @@ def dispatch_problem(groups: Sequence[ReplicaGroup],
 def admitted_rates(groups: Sequence[ReplicaGroup],
                    tenants: Sequence[Tenant],
                    mechanism: str = "psdsf-rdm",
+                   placement: str = "level",
                    **solver_kw) -> Dict[str, Dict[str, float]]:
     """tenant -> group -> concurrent requests admitted, under any registered
-    allocator (default PS-DSF/RDM). Convergence is enforced via the shared
-    residual-tolerance check (raises ``ConvergenceError``; never a stripped
-    ``assert``)."""
+    allocator (default PS-DSF/RDM) and placement strategy (default the
+    exact level fill; ``"headroom"``/``"bestfit"`` route tenants mix-aware
+    across groups — see ``repro.core.placement``). Convergence is enforced
+    via the shared residual-tolerance check (raises ``ConvergenceError``;
+    never a stripped ``assert``)."""
     prob = dispatch_problem(groups, tenants)
-    alloc, info = get_allocator(mechanism)(prob, **solver_kw)
+    alloc, info = get_allocator(mechanism)(prob, placement=placement,
+                                           **solver_kw)
     ensure_converged(info, what=f"{mechanism} serving dispatch")
     # Pooled mechanisms (drf) return an allocation on a DIFFERENT problem
     # (the substitutability relaxation, eligibility dropped) — identity

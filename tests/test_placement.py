@@ -1,0 +1,453 @@
+"""Placement layer: strategy registry, golden parity, stranded capacity.
+
+The load-bearing claims of the mechanism x placement cross-product:
+
+  * ``placement="level"`` is byte-identical to the pre-refactor fill — it
+    IS the same code path — and reproduces the paper's Section II-B worked
+    examples to 1e-6 on both backends;
+  * ``placement="headroom"`` strands strictly less capacity than ``level``
+    on the dense contended instance (``dense_random_instance``), with
+    ``bestfit`` the strandedness upper bound below both;
+  * headroom/bestfit keep feasibility for every mechanism (the only
+    guarantee those strategies claim — see the README table);
+  * the jitted mirrors (level/headroom) agree with the numpy fills, single
+    and batched, and the churn tick accepts ``placement=``;
+  * the scheduling layers thread the knob and ``SolveInfo`` records the
+    strategy plus the stranded-capacity fraction;
+  * opt-in sweep server ordering ("rotate") certifies at scheduler
+    tolerance on a dense instance whose fixed-order sweep limit-cycles.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (Allocation, AllocationProblem, gamma_matrix,
+                        get_allocator, get_placement, level_rate_matrix,
+                        list_placements, solve, solve_psdsf_rdm,
+                        solve_psdsf_tdm, solve_tsf, stranded_fraction,
+                        sweep_fixed_point)
+from repro.core.instances import (dense_random_instance, fig1_instance,
+                                  fig2_instance, google_cluster_instance)
+from repro.core.placement import repack_pass, routed_level_fill
+from repro.core.properties import (check_feasible_rdm, check_feasible_tdm)
+
+LEVEL_FILL = ("cdrfh", "tsf", "cdrf")
+SWEEP = ("psdsf-rdm", "psdsf-tdm") + LEVEL_FILL
+
+
+def random_problems(num, seed=0, max_users=8, max_servers=4,
+                    max_resources=3):
+    rng = np.random.default_rng(seed)
+    probs = []
+    while len(probs) < num:
+        n = rng.integers(2, max_users + 1)
+        k = rng.integers(1, max_servers + 1)
+        r = rng.integers(1, max_resources + 1)
+        prob = AllocationProblem(rng.uniform(0.05, 2.0, (n, r)),
+                                 rng.uniform(2.0, 30.0, (k, r)),
+                                 rng.uniform(0.5, 2.0, n),
+                                 (rng.random((n, k)) > 0.25).astype(float))
+        keep = gamma_matrix(prob).sum(axis=1) > 0
+        if keep.sum() >= 2:
+            probs.append(prob.restrict_users(keep))
+    return probs
+
+
+class TestRegistry:
+    def test_strategies_registered(self):
+        assert list_placements() == ("bestfit", "headroom", "level")
+
+    def test_unknown_raises(self):
+        with pytest.raises(KeyError, match="unknown placement"):
+            get_placement("flow-lp")
+
+    def test_metadata(self):
+        assert get_placement("level").mechanism_exact
+        assert get_placement("level").jax_backend
+        assert get_placement("headroom").jax_backend
+        assert not get_placement("headroom").mechanism_exact
+        assert not get_placement("bestfit").jax_backend
+
+
+class TestLevelGoldenParity:
+    """Acceptance anchor: level == the pre-refactor exact fill."""
+
+    @pytest.mark.parametrize("mechanism", SWEEP)
+    def test_explicit_level_matches_default(self, mechanism):
+        for prob_fn in (fig1_instance, fig2_instance):
+            prob = prob_fn()
+            a_def, i_def = get_allocator(mechanism)(prob)
+            a_lvl, i_lvl = get_allocator(mechanism)(prob, placement="level")
+            np.testing.assert_array_equal(a_lvl.x, a_def.x)
+            assert i_def.placement == i_lvl.placement == "level"
+
+    def test_paper_examples_level_numpy(self):
+        alloc, info = solve_tsf(fig1_instance(), placement="level")
+        assert info.converged
+        np.testing.assert_allclose(alloc.tasks_per_user, [2.0, 2.0, 8.0],
+                                   atol=1e-6)
+        alloc, _ = get_allocator("cdrfh")(fig1_instance(), placement="level")
+        np.testing.assert_allclose(alloc.tasks_per_user,
+                                   [60 / 23, 72 / 23, 144 / 23], atol=1e-6)
+        alloc, _ = solve_psdsf_rdm(fig1_instance(), placement="level")
+        np.testing.assert_allclose(alloc.tasks_per_user, [3.0, 3.0, 6.0],
+                                   atol=1e-6)
+
+    def test_paper_examples_level_jax(self):
+        for mechanism, want in (("tsf", [2.0, 2.0, 8.0]),
+                                ("cdrfh", [60 / 23, 72 / 23, 144 / 23]),
+                                ("psdsf-rdm", [3.0, 3.0, 6.0])):
+            alloc, info = solve(fig1_instance(), mechanism, backend="jax",
+                                placement="level")
+            assert info.converged
+            np.testing.assert_allclose(alloc.tasks_per_user, want, atol=5e-5)
+
+    def test_google_cluster_level_unchanged(self):
+        prob, _ = google_cluster_instance()
+        a_def, _ = solve_psdsf_rdm(prob)
+        a_lvl, _ = solve_psdsf_rdm(prob, placement="level")
+        np.testing.assert_array_equal(a_lvl.x, a_def.x)
+
+
+class TestStrandedCapacity:
+    """Acceptance anchor: headroom recovers stranded capacity on the dense
+    contended instance (where the mix-oblivious fill loses ~2x vs greedy)."""
+
+    @pytest.mark.parametrize("mechanism", LEVEL_FILL)
+    def test_headroom_strands_strictly_less_dense(self, mechanism):
+        prob = dense_random_instance()
+        _, i_lvl = get_allocator(mechanism)(prob, placement="level")
+        _, i_head = get_allocator(mechanism)(prob, placement="headroom")
+        _, i_best = get_allocator(mechanism)(prob, placement="bestfit")
+        # measured: level ~0.48, headroom ~0.38, bestfit ~0.14-0.20
+        assert i_head.stranded_frac < i_lvl.stranded_frac - 0.05, (
+            i_lvl.stranded_frac, i_head.stranded_frac)
+        assert i_best.stranded_frac < i_head.stranded_frac, (
+            i_head.stranded_frac, i_best.stranded_frac)
+
+    @pytest.mark.parametrize("mechanism", ("tsf", "cdrfh"))
+    def test_headroom_does_not_sacrifice_min_level(self, mechanism):
+        """On the dense instance the recovered capacity lifts the max-min
+        level too (routing helps the worst-off user, not just utilization)."""
+        prob = dense_random_instance()
+        w = np.maximum(
+            level_rate_matrix(prob, mechanism).max(axis=1), 1e-300)
+        a_lvl, _ = get_allocator(mechanism)(prob, placement="level")
+        a_head, _ = get_allocator(mechanism)(prob, placement="headroom")
+        lvl = (a_lvl.tasks_per_user / (prob.weights * w)).min()
+        head = (a_head.tasks_per_user / (prob.weights * w)).min()
+        assert head >= lvl * 0.99
+
+    def test_psdsf_headroom_no_worse_than_level(self):
+        """PS-DSF's gamma-weighted per-server fill is already mix-aware;
+        repack-and-refill only ever keeps measured improvements."""
+        for prob in (dense_random_instance(),
+                     dense_random_instance(seed=3)):
+            _, i_lvl = solve_psdsf_rdm(prob, placement="level")
+            a, i_head = solve_psdsf_rdm(prob, placement="headroom")
+            assert i_head.converged
+            assert i_head.stranded_frac <= i_lvl.stranded_frac + 1e-9
+            ok, msg = check_feasible_rdm(a, tol=1e-6)
+            assert ok, msg
+
+    def test_stranded_fraction_metric(self):
+        prob = fig1_instance()
+        assert stranded_fraction(prob, np.zeros((3, 2))) == pytest.approx(1.0)
+        # bandwidth on server 2 has zero capacity -> not demandable; a full
+        # pack of everything else yields zero stranding
+        full = np.array([[0.0, 0.0], [0.0, 0.0], [0.0, 0.0]])
+        assert 0.0 <= stranded_fraction(prob, full) <= 1.0
+
+
+class TestFeasibilityAcrossPairs:
+    """The only guarantee headroom/bestfit claim: never infeasible."""
+
+    @pytest.mark.parametrize("placement", ("headroom", "bestfit"))
+    @pytest.mark.parametrize("mechanism", SWEEP)
+    def test_feasible_random(self, mechanism, placement):
+        check = (check_feasible_tdm if mechanism == "psdsf-tdm"
+                 else check_feasible_rdm)
+        for prob in random_problems(6, seed=11):
+            alloc, info = get_allocator(mechanism)(prob, placement=placement)
+            assert info.converged
+            assert info.placement == placement
+            ok, msg = check(alloc, tol=1e-6)
+            assert ok, f"{mechanism} x {placement}: {msg}"
+
+    def test_repack_preserves_totals_and_feasibility(self):
+        for mode, solver in (("rdm", solve_psdsf_rdm),
+                             ("tdm", solve_psdsf_tdm)):
+            prob = dense_random_instance(num_users=20, num_servers=6)
+            alloc, _ = solver(prob)
+            g = gamma_matrix(prob)
+            x2 = repack_pass(prob, alloc.x, g, mode=mode)
+            np.testing.assert_allclose(x2.sum(axis=1),
+                                       alloc.x.sum(axis=1), rtol=1e-9)
+            check = check_feasible_rdm if mode == "rdm" else check_feasible_tdm
+            ok, msg = check(Allocation(prob, x2), tol=1e-6)
+            assert ok, f"{mode}: {msg}"
+
+    def test_routed_fill_event_budget(self):
+        """The fill terminates within its K*R + N event budget."""
+        prob = dense_random_instance()
+        lg = level_rate_matrix(prob, "tsf")
+        _, events = routed_level_fill(prob, lg)
+        assert events <= (prob.num_servers * prob.num_resources
+                          + prob.num_users + 1)
+
+    @pytest.mark.parametrize("factor", (1e-8, 1e8))
+    def test_routed_fill_scale_invariant(self, factor):
+        """Uniformly rescaling capacities rescales the allocation — the
+        fill's gates are relative, not absolute cutoffs."""
+        base = dense_random_instance(num_users=10, num_servers=4,
+                                     num_resources=3)
+        scaled = AllocationProblem(base.demands, base.capacities * factor,
+                                   base.weights, base.eligibility)
+        for placement in ("headroom", "bestfit"):
+            a1, i1 = get_allocator("tsf")(base, placement=placement)
+            a2, i2 = get_allocator("tsf")(scaled, placement=placement)
+            ref = max(1.0, float(a1.x.max()))
+            np.testing.assert_allclose(a2.x / factor / ref, a1.x / ref,
+                                       atol=1e-9)
+            assert i2.stranded_frac == pytest.approx(i1.stranded_frac,
+                                                     abs=1e-9)
+
+
+class TestSolveInfoContract:
+    def test_records_placement_and_stranding(self):
+        prob = fig2_instance()
+        for mechanism in ("psdsf-rdm", "tsf", "drf", "uniform"):
+            _, info = solve(prob, mechanism)
+            assert info.placement == "level"
+            assert 0.0 <= info.stranded_frac <= 1.0, mechanism
+
+    def test_closed_form_rejects_routing(self):
+        for mechanism in ("drf", "uniform"):
+            with pytest.raises(ValueError, match="no placement freedom"):
+                solve(fig1_instance(), mechanism, placement="headroom")
+
+    def test_unknown_placement_raises_everywhere(self):
+        with pytest.raises(KeyError, match="unknown placement"):
+            solve(fig1_instance(), "tsf", placement="pack-tight")
+        with pytest.raises(KeyError, match="unknown placement"):
+            solve_psdsf_rdm(fig1_instance(), placement="pack-tight")
+
+
+class TestJaxMirrors:
+    def test_routed_fill_parity(self):
+        from repro.core.baselines_jax import solve_baseline_jax
+        for prob in (fig1_instance(), fig2_instance(),
+                     dense_random_instance()):
+            a_np, i_np = solve_tsf(prob, placement="headroom")
+            a_jx, i_jx = solve_baseline_jax(prob, "tsf",
+                                            placement="headroom")
+            scale = max(1.0, float(a_np.x.max()))
+            np.testing.assert_allclose(a_jx.x / scale, a_np.x / scale,
+                                       atol=1e-4)
+            assert i_jx.placement == "headroom"
+            assert i_jx.stranded_frac == pytest.approx(i_np.stranded_frac,
+                                                       abs=1e-3)
+
+    def test_batched_headroom_matches_per_problem(self):
+        from repro.core.baselines_jax import (baseline_solve_batched,
+                                              batch_level_rates)
+        from repro.core.psdsf_jax import batch_problems, unbatch_solutions
+        probs = random_problems(4, seed=5)
+        bat = batch_problems(probs)
+        lg = batch_level_rates(probs, "tsf")
+        xb, _, _ = baseline_solve_batched(
+            bat["demands"], bat["capacities"], bat["weights"], lg,
+            placement="headroom")
+        allocs = unbatch_solutions(xb, probs)
+        for alloc, prob in zip(allocs, probs):
+            a_np, _ = solve_tsf(prob, placement="headroom")
+            scale = max(1.0, float(a_np.x.max()))
+            np.testing.assert_allclose(alloc.x / scale, a_np.x / scale,
+                                       atol=1e-4)
+
+    def test_batched_level_explicit_matches_default(self):
+        """The batched psdsf path accepts placement= and its explicit
+        "level" is the pre-refactor default."""
+        from repro.core.psdsf_jax import batch_problems, psdsf_solve_batched
+        probs = random_problems(3, seed=2)
+        bat = batch_problems(probs)
+        args = (bat["demands"], bat["capacities"], bat["weights"],
+                bat["gamma"])
+        x_def, r_def, _ = psdsf_solve_batched(*args, max_rounds=64)
+        x_lvl, r_lvl, _ = psdsf_solve_batched(*args, max_rounds=64,
+                                              placement="level")
+        np.testing.assert_array_equal(np.asarray(x_lvl), np.asarray(x_def))
+        np.testing.assert_array_equal(np.asarray(r_lvl), np.asarray(r_def))
+
+    def test_psdsf_headroom_jax(self):
+        prob = dense_random_instance(num_users=24, num_servers=6)
+        a_lvl, i_lvl = solve(prob, "psdsf-rdm", backend="jax",
+                             placement="level")
+        a_head, i_head = solve(prob, "psdsf-rdm", backend="jax",
+                               placement="headroom")
+        assert i_head.converged
+        assert i_head.stranded_frac <= i_lvl.stranded_frac + 1e-9
+        ok, msg = check_feasible_rdm(a_head, tol=1e-4)
+        assert ok, msg
+
+    def test_bestfit_has_no_jax_mirror(self):
+        with pytest.raises(ValueError, match="no jitted mirror"):
+            solve(fig1_instance(), "tsf", backend="jax",
+                  placement="bestfit")
+
+
+class TestSchedulingLayers:
+    def _cluster(self):
+        from repro.sched import Cluster, TPUPod, TenantJob
+        pods = [TPUPod("a", "v5e", 64, 16, 128, 400, 25),
+                TPUPod("b", "v5p", 32, 95, 192, 600, 50),
+                TPUPod("c", "v5e", 64, 16, 128, 400, 0)]
+        jobs = [TenantJob("j1", 1.0, 8, 100, 16, 50, 0),
+                TenantJob("j2", 2.0, 8, 600, 16, 50, 0,
+                          min_hbm_per_chip=90),
+                TenantJob("j3", 1.0, 4, 50, 8, 25, 1, needs_dcn=True)]
+        return Cluster(pods), jobs
+
+    @pytest.mark.parametrize("placement", ("level", "headroom", "bestfit"))
+    def test_schedule_placements(self, placement):
+        from repro.sched import schedule, schedule_detail
+        cluster, jobs = self._cluster()
+        quotas = schedule(cluster, jobs, mechanism="tsf",
+                          placement=placement)
+        assert set(quotas) == {"j1", "j2", "j3"}
+        assert all(v >= -1e-9 for v in quotas.values())
+        _, info = schedule_detail(cluster, jobs, mechanism="tsf",
+                                  placement=placement)
+        assert info.placement == placement
+        assert 0.0 <= info.stranded_frac <= 1.0
+
+    def test_admitted_rates_placement(self):
+        from repro.sched import ReplicaGroup, Tenant, admitted_rates
+        groups = [ReplicaGroup("g0", 64, 256, 50_000, max_context=32768),
+                  ReplicaGroup("g1", 128, 128, 80_000, max_context=4096)]
+        tenants = [Tenant("a", 1.0, 4096, 0.5, 2048),
+                   Tenant("b", 1.0, 32768, 4.0, 16384)]
+        for placement in ("headroom", "bestfit"):
+            rates = admitted_rates(groups, tenants, mechanism="tsf",
+                                   placement=placement)
+            assert rates["b"]["g1"] == 0.0        # ineligible stays empty
+
+    def test_churn_simulator_headroom_equilibrium(self):
+        from repro.sched.churn import ChurnSimulator
+        prob = fig2_instance()
+        sim = ChurnSimulator(prob, mechanism="tsf", placement="headroom",
+                             telemetry=False)
+        sim.step([], 0.0)
+        ref, _ = solve_tsf(prob, placement="headroom")
+        np.testing.assert_allclose(sim.x.sum(axis=1), ref.tasks_per_user,
+                                   atol=1e-3)
+
+    def test_churn_simulator_psdsf_headroom_ticks(self):
+        from repro.sched.churn import ChurnEvent, ChurnSimulator
+        prob = dense_random_instance(num_users=16, num_servers=4)
+        sim = ChurnSimulator(prob, placement="headroom", telemetry=False,
+                             max_rounds=64, tol=1e-4)
+        rec = sim.step([], 0.0)
+        assert rec.residual <= 1e-4 * gamma_matrix(prob).max()
+        rec = sim.step([ChurnEvent(1.0, "departure", user=0)], 1.0)
+        assert sim.x[0].sum() == 0.0
+
+    def test_churn_simulator_rejects_bestfit(self):
+        from repro.sched.churn import ChurnSimulator
+        with pytest.raises(ValueError, match="no jitted mirror"):
+            ChurnSimulator(fig1_instance(), placement="bestfit")
+
+
+class TestSweepServerOrder:
+    """Opt-in ordering for the Gauss-Seidel sweep (ROADMAP PR 1 note)."""
+
+    def _dense(self):
+        # the 100x20 dense instance whose fixed-order sweep limit-cycles
+        # just above scheduler tolerance (pinned by the regression below)
+        rng = np.random.default_rng(0)
+        return AllocationProblem(rng.uniform(0.05, 2.0, (100, 4)),
+                                 rng.uniform(5.0, 50.0, (20, 4)),
+                                 rng.uniform(0.5, 2.0, 100),
+                                 (rng.random((100, 20)) > 0.3).astype(float))
+
+    def test_rotate_certifies_where_fixed_limit_cycles(self):
+        prob = self._dense()
+        scale = gamma_matrix(prob).max()
+        kw = dict(max_rounds=300, tol=1e-4, loose_tol=5e-3)
+        _, i_fixed = solve_psdsf_rdm(prob, server_order="fixed", **kw)
+        assert i_fixed.approx and i_fixed.residual > 1e-4 * scale, (
+            "instance no longer limit-cycles under fixed order; "
+            "re-pin the regression instance")
+        a_rot, i_rot = solve_psdsf_rdm(prob, server_order="rotate", **kw)
+        assert i_rot.converged and not i_rot.approx
+        assert i_rot.residual <= 1e-4 * scale
+
+    def test_orders_reach_consistent_fixed_points(self):
+        prob = dense_random_instance(num_users=30, num_servers=8)
+        results = {}
+        for order in ("fixed", "rotate", "random"):
+            a, info = solve_psdsf_rdm(prob, server_order=order,
+                                      max_rounds=200, tol=1e-6)
+            assert info.converged
+            results[order] = a.tasks_per_user
+        scale = max(1.0, results["fixed"].max())
+        for order in ("rotate", "random"):
+            np.testing.assert_allclose(results[order] / scale,
+                                       results["fixed"] / scale, atol=5e-3)
+
+    def test_unknown_order_raises(self):
+        with pytest.raises(ValueError, match="server_order"):
+            sweep_fixed_point(lambda i, x_ext: np.zeros(2), 2, 2, 1.0,
+                              server_order="zigzag")
+
+
+class TestClusterEligibilityVectorized:
+    """Satellite: the generation allow-list is np.isin-vectorized; parity
+    with the per-job predicate."""
+
+    def test_mixed_allowlists_parity(self):
+        from repro.sched import Cluster, TPUPod, TenantJob
+        pods = [TPUPod(f"p{i}", gen, 32, hbm, 128, 400, dcn)
+                for i, (gen, hbm, dcn) in enumerate(
+                    [("v4", 32, 25), ("v5e", 16, 0), ("v5p", 95, 50),
+                     ("v5e", 16, 25), ("v6e", 32, 50)])]
+        jobs = [
+            TenantJob("none", 1.0, 8, 100, 16, 50, 0),
+            TenantJob("str", 1.0, 8, 100, 16, 50, 0, generations="v5e"),
+            TenantJob("one", 1.0, 8, 100, 16, 50, 0, generations=("v5p",)),
+            TenantJob("many", 1.0, 8, 100, 16, 50, 0,
+                      generations=("v4", "v6e", "v5p")),
+            TenantJob("mixed", 1.0, 8, 100, 16, 50, 1,
+                      generations=["v5e", "v6e"], needs_dcn=True),
+            TenantJob("nohit", 1.0, 8, 100, 16, 50, 0,
+                      generations=("v7x",), min_hbm_per_chip=20),
+            # falsy allow-lists mean UNRESTRICTED, exactly as
+            # TenantJob.eligible's `if self.generations` treats them
+            TenantJob("empty-str", 1.0, 8, 100, 16, 50, 0, generations=""),
+            TenantJob("empty-seq", 1.0, 8, 100, 16, 50, 0, generations=()),
+        ]
+        prob = Cluster(pods).problem(jobs)
+        expected = np.array([[1.0 if j.eligible(p) else 0.0 for p in pods]
+                             for j in jobs])
+        np.testing.assert_array_equal(prob.eligibility, expected)
+
+    def test_padding_sentinel_cannot_match_empty_generation(self):
+        """A pod whose generation is the empty string must not become
+        eligible for generation-restricted jobs via the pad slots."""
+        from repro.sched import Cluster, TPUPod, TenantJob
+        pods = [TPUPod("a", "v5e", 64, 16, 128, 400, 25),
+                TPUPod("weird", "", 64, 16, 128, 400, 25)]
+        jobs = [TenantJob("two", 1.0, 8, 100, 16, 50, 0,
+                          generations=("v5e", "v5p")),
+                TenantJob("one", 1.0, 8, 100, 16, 50, 0,
+                          generations=("v4",))]
+        prob = Cluster(pods).problem(jobs)
+        expected = np.array([[1.0 if j.eligible(p) else 0.0 for p in pods]
+                             for j in jobs])
+        np.testing.assert_array_equal(prob.eligibility, expected)
+
+    def test_no_allowlists_at_all(self):
+        from repro.sched import Cluster, TPUPod, TenantJob
+        pods = [TPUPod("a", "v5e", 64, 16, 128, 400, 25)]
+        jobs = [TenantJob("j", 1.0, 8, 100, 16, 50, 0)]
+        prob = Cluster(pods).problem(jobs)
+        np.testing.assert_array_equal(prob.eligibility, [[1.0]])

@@ -92,6 +92,44 @@ def test_allocator_guaranteed_invariants(mechanism, prob):
         assert ok, f"{mechanism} {check.__name__}: {msg}"
 
 
+# Mechanism x placement-strategy guarantee matrix (see core.placement and
+# the README "Placement strategies" table). ``level`` keeps each
+# mechanism's own guarantee row above; the routed strategies trade the
+# mechanism-exact totals for less stranded capacity, so the ONLY property
+# they claim is feasibility in the mechanism's regime. Pairs are listed
+# explicitly so adding a strategy (or upgrading a claim, e.g. an LP-exact
+# router that preserves max-min) forces a conscious edit here.
+PLACEMENT_PAIR_GUARANTEES = {
+    ("psdsf-rdm", "headroom"): (check_feasible_rdm,),
+    ("psdsf-rdm", "bestfit"): (check_feasible_rdm,),
+    ("psdsf-tdm", "headroom"): (check_feasible_tdm,),
+    ("psdsf-tdm", "bestfit"): (check_feasible_tdm,),
+    ("cdrfh", "headroom"): (check_feasible_rdm,),
+    ("cdrfh", "bestfit"): (check_feasible_rdm,),
+    ("tsf", "headroom"): (check_feasible_rdm,),
+    ("tsf", "bestfit"): (check_feasible_rdm,),
+    ("cdrf", "headroom"): (check_feasible_rdm,),
+    ("cdrf", "bestfit"): (check_feasible_rdm,),
+}
+
+
+@pytest.mark.parametrize("mechanism,placement",
+                         sorted(PLACEMENT_PAIR_GUARANTEES))
+@settings(max_examples=15, deadline=None)
+@given(prob=problems())
+def test_placement_pair_guaranteed_invariants(mechanism, placement, prob):
+    """Each mechanism x routed-placement pair keeps exactly the properties
+    it claims (feasibility) on random heterogeneous instances; ``level``
+    pairs are covered by ``test_allocator_guaranteed_invariants``."""
+    alloc, info = get_allocator(mechanism)(prob, placement=placement)
+    assert info.converged, f"{mechanism} x {placement}: did not converge"
+    assert info.placement == placement
+    tol = max(1e-5, 10.0 * info.residual)
+    for check in PLACEMENT_PAIR_GUARANTEES[(mechanism, placement)]:
+        ok, msg = check(alloc, tol=tol)
+        assert ok, f"{mechanism} x {placement} {check.__name__}: {msg}"
+
+
 @settings(max_examples=60, deadline=None)
 @given(problems())
 def test_rdm_invariants(prob):

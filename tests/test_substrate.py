@@ -167,7 +167,8 @@ class TestFaultTolerance:
     def test_psdsf_schedule_respects_constraints(self):
         from repro.sched import schedule_detail
         cluster, jobs = self._cluster()
-        alloc = schedule_detail(cluster, jobs)
+        alloc, info = schedule_detail(cluster, jobs)
+        assert info.placement == "level" and 0.0 <= info.stranded_frac <= 1.0
         # serve-72b only eligible on the v5p pod (index 2)
         assert alloc.x[1, 0] == 0 and alloc.x[1, 1] == 0
         assert alloc.x[1, 2] > 0
