@@ -4,12 +4,22 @@ Reads the stranded-capacity fractions the benchmark wrote into the smoke
 artifact (``artifacts/BENCH_smoke.json``) and fails when routed placement
 regresses:
 
-  * a ``headroom``/``bestfit`` row strands more than the committed baseline
-    (``benchmarks/placement_baseline.json``) plus a small tolerance;
+  * a ``headroom``/``bestfit``/``lexmm`` row strands more than the
+    committed baseline (``benchmarks/placement_baseline.json``) plus a
+    small tolerance;
   * ``headroom`` no longer strands less than ``level`` on the global-share
-    rows the refactor exists to improve (the dense/cell tsf + cdrfh pairs);
-  * an expected row disappeared (a silently skipped benchmark must not
-    pass the gate).
+    rows the PR-3 refactor exists to improve (the dense/cell tsf + cdrfh
+    pairs);
+  * ``lexmm`` strands more than the COMMITTED headroom value on those same
+    pairs (the ISSUE-4 acceptance: the exact flow router must pack at
+    least as tightly as the heuristic it supersedes — dense/tsf: <= 0.379
+    — while staying mechanism-exact, which tests/test_lexmm.py pins);
+  * an expected row disappeared or reported a non-finite stranded fraction
+    (a silently skipped or NaN-emitting benchmark must not pass the gate).
+
+Baseline entries may be ``null`` — presence is then still required but the
+value is unchecked (how a row whose metric is legitimately undefined would
+be recorded, instead of a NaN literal a strict JSON loader rejects).
 
 Update the baseline intentionally (re-run the benchmark, commit the new
 numbers) — never by loosening this check.
@@ -19,6 +29,7 @@ Usage: python benchmarks/check_placement.py [SMOKE_JSON] [BASELINE_JSON]
 from __future__ import annotations
 
 import json
+import math
 import re
 import sys
 from pathlib import Path
@@ -27,18 +38,29 @@ from pathlib import Path
 #: deterministic; this only absorbs fp/library drift)
 TOLERANCE = 0.02
 
-#: rows where headroom must strictly beat level (the refactor's headline)
+#: rows where the routed strategies must beat level / stay under headroom
 MUST_IMPROVE = tuple(
     f"placement_{inst}_{mech}" for inst in ("dense", "cell")
     for mech in ("tsf", "cdrfh"))
 
+#: routed strategies regression-gated against the committed baseline
+GATED_SUFFIXES = ("_headroom", "_bestfit", "_lexmm")
 
-def stranded_by_row(rows: list[dict]) -> dict[str, float]:
-    out = {}
+
+def stranded_by_row(rows: list[dict]) -> dict[str, float | None]:
+    """name -> stranded fraction; None when the row printed a non-finite
+    value (``stranded=null``/``nan``), so the gate can name the row instead
+    of silently dropping it."""
+    out: dict[str, float | None] = {}
     for row in rows:
-        m = re.search(r"stranded=([0-9.eE+-]+)", row.get("derived", ""))
-        if m and row["name"].startswith("placement_"):
-            out[row["name"]] = float(m.group(1))
+        m = re.search(r"stranded=(\S+)", row.get("derived", ""))
+        if not m or not row["name"].startswith("placement_"):
+            continue
+        try:
+            val = float(m.group(1))
+        except ValueError:
+            val = math.nan
+        out[row["name"]] = val if math.isfinite(val) else None
     return out
 
 
@@ -54,26 +76,48 @@ def main(argv=None) -> int:
         if name not in got:
             failures.append(f"missing row {name} (benchmark skipped?)")
             continue
-        if (name.endswith(("_headroom", "_bestfit"))
+        if baseline is None:
+            continue                    # presence-only entry: a null
+            #                             baseline declares the metric
+            #                             legitimately undefined, so a
+            #                             null/nan row is acceptable too
+        if got[name] is None:
+            failures.append(f"{name}: stranded fraction is not finite "
+                            f"(benchmark emitted null/nan)")
+            continue
+        if (name.endswith(GATED_SUFFIXES)
                 and got[name] > baseline + TOLERANCE):
             failures.append(
                 f"{name}: stranded {got[name]:.4f} regressed vs baseline "
                 f"{baseline:.4f} (+{TOLERANCE} tolerance)")
+    # the headline invariants are UNCONDITIONAL: a baseline regeneration
+    # that drops these pairs must fail here, not silently disable the check
     for prefix in MUST_IMPROVE:
         lvl, head = got.get(f"{prefix}_level"), got.get(f"{prefix}_headroom")
+        lex = got.get(f"{prefix}_lexmm")
         if lvl is None or head is None:
             failures.append(f"missing level/headroom pair for {prefix}")
         elif head >= lvl:
             failures.append(
                 f"{prefix}: headroom ({head:.4f}) no longer strands less "
                 f"than level ({lvl:.4f})")
+        head_committed = want.get(f"{prefix}_headroom")
+        if lex is None:
+            failures.append(f"missing lexmm row for {prefix}")
+        elif head_committed is not None and lex > head_committed:
+            failures.append(
+                f"{prefix}: lexmm ({lex:.4f}) strands more than the "
+                f"committed headroom value ({head_committed:.4f}) — the "
+                f"exact router must pack at least as tightly as the "
+                f"heuristic it supersedes")
     if failures:
         print("placement gate FAILED:")
         for f in failures:
             print(f"  - {f}")
         return 1
     print(f"placement gate OK: {len(want)} rows within {TOLERANCE} of "
-          f"baseline; headroom < level on {len(MUST_IMPROVE)} pairs")
+          f"baseline; headroom < level and lexmm <= committed headroom on "
+          f"{len(MUST_IMPROVE)} pairs")
     return 0
 
 

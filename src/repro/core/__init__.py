@@ -9,6 +9,7 @@ from .placement import (PlacementStrategy, SolveInfo, get_placement,
                         routed_level_fill, server_fill_rdm, server_fill_tdm,
                         solve_with_placement, stranded_fraction,
                         sweep_fixed_point)
+from .flowrouter import FlowRouterUnavailable, lexmm_route
 from .psdsf import (algorithm1_literal, solve_psdsf_rdm, solve_psdsf_tdm)
 from .baselines import (level_rate_matrix, score_weights, solve_cdrf,
                         solve_cdrfh, solve_drf_pooled, solve_drf_single_pool,
@@ -26,7 +27,7 @@ __all__ = [
     "server_fill_rdm", "server_fill_tdm", "sweep_fixed_point",
     "PlacementStrategy", "get_placement", "list_placements",
     "register_placement", "routed_level_fill", "solve_with_placement",
-    "stranded_fraction",
+    "stranded_fraction", "lexmm_route", "FlowRouterUnavailable",
     "solve_cdrfh", "solve_tsf", "solve_cdrf", "solve_drf_single_pool",
     "solve_drf_pooled", "solve_level_fill", "level_rate_matrix",
     "score_weights", "uniform_allocation", "DistributedPSDSF",

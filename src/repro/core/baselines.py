@@ -115,7 +115,9 @@ def solve_level_fill(
     ``placement="headroom"``/``"bestfit"`` instead run the routed global
     fill (``placement.routed_level_fill`` — mix-aware routing between
     saturation events; ``x0`` and the sweep knobs are then ignored, the
-    fill is one-shot). The acceptance band is scaled by the PER-SERVER
+    fill is one-shot), and ``placement="lexmm"`` the exact lexicographic
+    max-min flow router (``flowrouter.lexmm_route`` — mechanism-exact AND
+    tightly packed; also one-shot). The acceptance band is scaled by the PER-SERVER
     monopolization scale (``gamma_matrix(problem).max()``, an allocation
     magnitude), NOT by ``level_gamma`` — the score weights sum gamma over
     servers, so using them would loosen the band ~linearly with K.

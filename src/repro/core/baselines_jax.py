@@ -145,6 +145,15 @@ def _routed_fill_core(demands, capacities, weights, level_gamma,
     return x, events, jnp.array(0.0, dtype)
 
 
+def _reject_lexmm_traced(placement: str) -> None:
+    if placement == "lexmm":
+        raise ValueError(
+            "placement='lexmm' has no traced baseline fill — its level "
+            "increments are certified by host-side LP solves; call "
+            "solve_baseline_jax (which routes lexmm through "
+            "flowrouter.lexmm_route) or the numpy engine")
+
+
 @functools.partial(jax.jit, static_argnames=("max_rounds", "placement"))
 def baseline_solve_jax(demands, capacities, weights, level_gamma, *, x0=None,
                        max_rounds: int = 256, tol: float = 1e-6,
@@ -155,9 +164,13 @@ def baseline_solve_jax(demands, capacities, weights, level_gamma, *, x0=None,
     ``level_rate_matrix`` / ``level_rate_matrix_jnp``. Warm-startable via
     ``x0`` exactly like ``psdsf_solve_jax``. ``placement="headroom"`` runs
     the routed global fill instead of the per-server sweep (one-shot exact;
-    ``x0`` and the sweep knobs are ignored); ``"bestfit"`` is numpy-only.
+    ``x0`` and the sweep knobs are ignored); ``"bestfit"`` is numpy-only;
+    ``"lexmm"``'s flow certificates are LP solves with data-dependent
+    pivoting — there is nothing to trace, so this jitted entry point
+    rejects it (``solve_baseline_jax`` routes it host-side instead).
     """
     _check_placement(placement)
+    _reject_lexmm_traced(placement)
     if placement == "headroom":
         return _routed_fill_core(demands, capacities, weights, level_gamma)
     n, k = level_gamma.shape
@@ -179,9 +192,11 @@ def baseline_solve_batched(demands, capacities, weights, level_gamma, *,
     (B, K, R), weights (B, N), level_gamma (B, N, K), optional x0 (B, N, K).
     Pad heterogeneous problems with ``psdsf_jax.batch_problems`` (padding is
     inert: padded users carry level rate 0, padded servers zero capacity).
-    ``placement`` as in ``baseline_solve_jax``.
+    ``placement`` as in ``baseline_solve_jax`` (``"lexmm"`` rejected: the
+    flow certificates solve host-side).
     """
     _check_placement(placement)
+    _reject_lexmm_traced(placement)
     b, n, k = level_gamma.shape
     dtype = _solve_dtype(demands)
     if x0 is None:
@@ -214,11 +229,25 @@ def solve_baseline_jax(problem: AllocationProblem, mechanism: str, x0=None,
                        loose_tol: float = 5e-3, placement: str = "level"
                        ) -> tuple[Allocation, SolveInfo]:
     """Convenience wrapper with the same container/contract as the numpy
-    baseline solvers (``solve_tsf`` & co.)."""
+    baseline solvers (``solve_tsf`` & co.).
+
+    ``placement="lexmm"`` is honored here by running the exact flow router
+    host-side (``flowrouter.lexmm_route``) — an LP certificate has no XLA
+    mirror, and the router is one-shot exact, so there is nothing for the
+    jitted sweep to accelerate.
+    """
     from .gamma import gamma_matrix
 
     g = gamma_matrix(problem)    # computed once: level rates AND scale
     lg = level_rate_matrix(problem, mechanism, gamma=g)
+    if placement == "lexmm":
+        from .flowrouter import lexmm_route
+
+        x, stages = lexmm_route(problem, lg)
+        return (Allocation(problem, x),
+                SolveInfo(stages, True, 0.0, placement="lexmm",
+                          stranded_frac=stranded_fraction(problem, x,
+                                                          gamma=g)))
     x, rounds, resid = baseline_solve_jax(
         jnp.asarray(problem.demands), jnp.asarray(problem.capacities),
         jnp.asarray(problem.weights), jnp.asarray(lg),

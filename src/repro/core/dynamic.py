@@ -67,19 +67,51 @@ def _tick_jax_fn():
     return tick
 
 
+def min_vds_guarded(x: np.ndarray, weights: np.ndarray, gamma: np.ndarray,
+                    active: np.ndarray, *, interpret: bool = True):
+    """The Eq. 16 reduction with the inactive/zero-weight mask applied
+    BEFORE the division: a zero-weight user (weights are validated > 0 at
+    construction, but callers can rescale the array in place) must be
+    excluded exactly like an inactive one, not turn a server's min into
+    inf/NaN. Shared by ``DistributedPSDSF.min_vds`` and the churn
+    simulator's telemetry (imported from here as public API)."""
+    from repro.kernels.psdsf_vds.ops import min_vds_padded
+
+    mask = np.asarray(active, dtype=bool) & (weights > 0)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        x_over_phi = np.where(mask, x.sum(axis=1)
+                              / np.where(mask, weights, 1.0), 0.0)
+    return min_vds_padded(x_over_phi, np.where(mask[:, None], gamma, 0.0),
+                          interpret=interpret)
+
+
 class DistributedPSDSF:
+    """``placement`` mirrors the strategy axis of the batch solvers at the
+    asynchronous tick layer: ``level`` (default) and ``lexmm`` tick
+    unchanged — the per-server fill IS the level placement, and PS-DSF's
+    per-server water levels are already the per-server lexicographic
+    optimum — while ``headroom``/``bestfit`` follow every tick with one
+    totals-preserving ``placement.repack_pass`` (proportional / greedy),
+    the asynchronous analogue of ``repack_refill`` (feasibility is
+    preserved by construction; the next tick re-equilibrates the levels).
+    """
+
     def __init__(self, problem: AllocationProblem, mode: str = "rdm",
                  seed: int = 0, engine: str = "numpy",
-                 precision: str = "highest"):
+                 precision: str = "highest", placement: str = "level"):
+        from .placement import get_placement
+
         if mode not in ("rdm", "tdm"):
             raise ValueError(mode)
         if engine not in _ENGINES:
             raise ValueError(f"engine must be one of {_ENGINES}: {engine}")
         if precision not in ("highest", "fast"):
             raise ValueError(precision)
+        get_placement(placement)               # unknown strategies fail fast
         self.problem = problem
         self.mode = mode
         self.engine = engine
+        self.placement = placement
         self.gamma = gamma_matrix(problem)
         self.x = np.zeros((problem.num_users, problem.num_servers))
         self.active = np.ones(problem.num_users, dtype=bool)
@@ -121,6 +153,7 @@ class DistributedPSDSF:
             self._rng.shuffle(idx)
         if self.engine == "jax":
             self._tick_with_jax(np.asarray(list(idx), dtype=np.int32))
+            self._repack_if_routed()
             return
         # Row sums feeding the external floors are maintained incrementally:
         # one O(NK) reduction per tick, O(N) updates per server after that.
@@ -136,6 +169,18 @@ class DistributedPSDSF:
                     p.demands, p.weights, gamma_i, x_ext)
             xsum += xi - self.x[:, i]
             self.x[:, i] = xi
+        self._repack_if_routed()
+
+    def _repack_if_routed(self) -> None:
+        """headroom/bestfit: one totals-preserving repack per tick (see the
+        class docstring); level/lexmm tick untouched."""
+        if self.placement not in ("headroom", "bestfit"):
+            return
+        from .placement import repack_pass
+
+        g = np.where(self.active[:, None], self.gamma, 0.0)
+        self.x = repack_pass(self.problem, self.x, g, mode=self.mode,
+                             greedy=self.placement == "bestfit")
 
     def _tick_with_jax(self, servers: np.ndarray) -> None:
         import jax.numpy as jnp
@@ -154,14 +199,14 @@ class DistributedPSDSF:
         Eq. 16 via the Pallas ``psdsf_vds`` reduction. ``interpret=True``
         runs the kernel in interpreter mode (CPU CI); pass False on TPU.
 
-        Servers where no active user is eligible report BIG (~3e38).
+        Servers where no active user is eligible report BIG (~3e38); that
+        includes the all-inactive edge case. Users whose weight has been
+        zeroed (in-place, after problem validation) are excluded like
+        inactive users — an unguarded ``x_n / phi_n`` would otherwise
+        poison the server min with inf/NaN.
         """
-        from repro.kernels.psdsf_vds.ops import min_vds_padded
-
-        return min_vds_padded(
-            self.x.sum(axis=1) / self.problem.weights,
-            np.where(self.active[:, None], self.gamma, 0.0),
-            interpret=interpret)
+        return min_vds_guarded(self.x, self.problem.weights, self.gamma,
+                                self.active, interpret=interpret)
 
     def allocation(self) -> Allocation:
         return Allocation(self.problem, self.x.copy())

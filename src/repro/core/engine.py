@@ -32,8 +32,11 @@ additionally routes the sweep-based mechanisms through the jitted engine
 closed-form mechanisms (drf, uniform) ignore the backend and accept only
 ``placement="level"`` (they have no placement freedom). ``placement``
 selects the routing strategy from ``core.placement`` (level / headroom /
-bestfit); the returned ``SolveInfo`` records the strategy and the
-stranded-capacity fraction of the layout.
+bestfit / lexmm — the exact lexicographic max-min flow router, which is
+mechanism-exact AND packs tightly; its LP certificates always solve
+host-side, so ``backend="jax"`` only changes the PS-DSF path, where lexmm
+is the identity on the jitted level solve); the returned ``SolveInfo``
+records the strategy and the stranded-capacity fraction of the layout.
 """
 from __future__ import annotations
 
@@ -143,9 +146,11 @@ def solve(problem: AllocationProblem, mechanism: str = "psdsf-rdm",
     """One-call entry point: registry lookup + optional jitted backend.
 
     ``placement`` selects the routing strategy for sweep mechanisms (see
-    ``core.placement``); the jax backend mirrors the strategies flagged
-    ``jax_backend`` in the registry (level, headroom — bestfit is
-    numpy-only).
+    ``core.placement``); the jax backend accepts the strategies flagged
+    ``jax_backend`` in the registry (level, headroom, lexmm — bestfit is
+    numpy-only). lexmm under ``backend="jax"`` is the identity on the
+    jitted level solve for PS-DSF and runs its LP certificates host-side
+    for the global-share mechanisms (``solve_baseline_jax`` routes it).
     """
     if backend not in ("numpy", "jax"):
         raise ValueError(f"backend must be 'numpy' or 'jax': {backend!r}")

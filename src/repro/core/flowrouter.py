@@ -1,0 +1,237 @@
+"""Exact lexicographic max-min flow router (``placement="lexmm"``).
+
+The routed heuristics in ``placement.py`` (``headroom``/``bestfit``) pack
+tightly but certify *feasibility only*: splitting a user's fill rate by
+per-server headroom can consume capacity a constrained user has no
+alternative to, losing the max-min level on small adversarial instances
+(the Fig. 1 totals shift the ROADMAP follow-up names). This module closes
+that gap with the standard water-filling-via-flow construction, solved
+exactly:
+
+1. raise every active user's level together and certify the largest common
+   increment by solving the routing feasibility problem on the tripartite
+   network  *source -> users -> eligible-server arcs -> per-(server,
+   resource) capacity rows*;
+2. freeze the users that are lexicographically *blocked* at the certified
+   level (cannot exceed it while everyone else keeps at least it — the
+   water-filling saturation condition);
+3. repeat with the remaining users until everyone is frozen.
+
+Each certificate is a max-flow feasibility problem whose arcs carry
+multi-resource consumption: one task of user n routed to server i draws
+``d[n, r]`` on every capacity row (i, r) of that server. With one resource
+per server this IS plain max-flow; with several it is the natural
+generalized-flow linear program, which we solve with scipy's HiGHS (an
+exact simplex/IPM — vertex solutions are accurate to fp round-off, which
+is where the worked-example 1e-6 exactness comes from). scipy ships in the
+repo's toolchain; if it is genuinely absent, ``lexmm`` raises
+``FlowRouterUnavailable`` at solve time and every other placement keeps
+working.
+
+Correctness sketch (the classic progressive-filling argument): the
+feasible set of user totals is a polytope, so at the maximal common
+increment the blocked set is non-empty (otherwise averaging the N
+single-user improvements raises everyone — contradiction), each stage
+freezes at least one user, and freezing exactly the blocked users yields
+the lexicographically maximal sorted level vector. Blocked users are found
+without per-user LPs: maximize the *sum* of per-candidate slacks; a zero
+optimum proves every candidate individually blocked (each single-user
+improvement is a feasible point of the sum-LP), while candidates with
+positive slack are provably raisable and leave the candidate set — at
+least one candidate resolves per iteration.
+
+Scope: the router needs a *server-independent* level rate (a user's level
+must not depend on where its tasks land), i.e. the global-share mechanisms
+cdrfh/tsf/cdrf, whose level-rate matrix is ``w_n`` on eligible servers.
+PS-DSF's per-server water levels have no routing freedom — its own
+``server_fill_rdm`` is already the per-server lexicographic optimum — so
+``placement="lexmm"`` is the identity on the level fill there (see
+``placement.solve_with_placement``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .types import AllocationProblem
+
+#: relative tolerance deciding whether a candidate's slack proves it
+#: raisable; relative to the certified common level, so uniformly rescaled
+#: instances classify identically
+_BLOCK_RTOL = 1e-7
+
+#: relative spread allowed in a user's per-arc level rates before the
+#: router refuses (routing freedom presumes the rate is server-independent)
+_RATE_RTOL = 1e-9
+
+
+class FlowRouterUnavailable(ImportError):
+    """scipy (the LP back end of the level-increment certificates) missing."""
+
+
+def _highs():
+    try:
+        from scipy import sparse
+        from scipy.optimize import linprog
+    except ImportError as exc:                      # pragma: no cover
+        raise FlowRouterUnavailable(
+            "placement='lexmm' certifies its level increments with scipy's "
+            "HiGHS LP solver; install scipy or pick another placement "
+            "strategy (level/headroom/bestfit)") from exc
+    return linprog, sparse
+
+
+class RoutingNetwork:
+    """The fixed-topology certificate network for one (problem, rate) pair.
+
+    Arcs are the eligible (user, server) pairs; capacity rows are the
+    (server, resource) pairs some arc draws on. Built once per solve — every
+    stage's LP reuses the same incidence matrices and only changes
+    right-hand sides / objective columns.
+    """
+
+    def __init__(self, problem: AllocationProblem, eligible: np.ndarray,
+                 users: np.ndarray):
+        _, sparse = _highs()
+        d = problem.demands
+        cap = problem.capacities
+        self.users = users                            # in-scope user ids
+        arc_user, arc_server = np.nonzero(eligible)
+        self.arc_user = arc_user
+        self.arc_server = arc_server
+        p = arc_user.shape[0]
+        # normalize capacities so HiGHS' absolute feasibility tolerances are
+        # relative to THIS instance's magnitudes (uniform rescale invariance)
+        self.cap_scale = float(cap.max(initial=0.0)) or 1.0
+        # capacity rows: only (i, r) pairs some arc draws on
+        draws = np.zeros_like(cap, dtype=bool)
+        np.logical_or.at(draws, arc_server, d[arc_user] > 0)
+        row_server, row_res = np.nonzero(draws)
+        row_of = np.full(cap.shape, -1, dtype=np.int64)
+        row_of[row_server, row_res] = np.arange(row_server.shape[0])
+        # COO triplets: arc p draws d[arc_user[p], r] on row (arc_server[p], r)
+        coefs = d[arc_user]                           # (P, R)
+        pr_arc, pr_res = np.nonzero(coefs)
+        rows = row_of[arc_server[pr_arc], pr_res]
+        self.a_cap = sparse.csr_matrix(
+            (coefs[pr_arc, pr_res], (rows, pr_arc)),
+            shape=(row_server.shape[0], p))
+        self.b_cap = cap[row_server, row_res] / self.cap_scale
+        # user-total incidence (one row per in-scope user, ones on its arcs)
+        urow = np.searchsorted(users, arc_user)
+        self.a_user = sparse.csr_matrix(
+            (np.ones(p), (urow, np.arange(p))), shape=(users.shape[0], p))
+
+    @property
+    def num_arcs(self) -> int:
+        return self.arc_user.shape[0]
+
+    def scatter(self, x_arc: np.ndarray, shape: tuple[int, int]) -> np.ndarray:
+        x = np.zeros(shape)
+        x[self.arc_user, self.arc_server] = x_arc * self.cap_scale
+        return x
+
+
+def _solve_lp(linprog, sparse, net: RoutingNetwork, cols, obj, b_eq):
+    """One certificate LP: arc variables plus ``cols`` slack columns hooked
+    into the user-total equalities. ``cols`` is a list of ``(rows, coeffs)``
+    array pairs — extra column j subtracts ``coeffs`` from the user rows
+    ``rows`` (one shared delta column spans every active row; a per-user
+    slack column spans just its own row)."""
+    p = net.num_arcs
+    extra = len(cols)
+    a_eq = net.a_user
+    a_ub = net.a_cap
+    if extra:
+        row_idx = np.concatenate([np.atleast_1d(r) for r, _ in cols])
+        col_idx = np.concatenate(
+            [np.full(np.atleast_1d(r).shape[0], j)
+             for j, (r, _) in enumerate(cols)])
+        data = -np.concatenate([np.atleast_1d(c) for _, c in cols])
+        eq_cols = sparse.csr_matrix((data, (row_idx, col_idx)),
+                                    shape=(a_eq.shape[0], extra))
+        a_eq = sparse.hstack([a_eq, eq_cols], format="csr")
+        a_ub = sparse.hstack(
+            [a_ub, sparse.csr_matrix((a_ub.shape[0], extra))], format="csr")
+    c = np.zeros(p + extra)
+    c[p:] = obj
+    res = linprog(c, A_ub=a_ub, b_ub=net.b_cap, A_eq=a_eq, b_eq=b_eq,
+                  bounds=(0, None), method="highs")
+    if res.status != 0:
+        raise RuntimeError(
+            f"lexmm certificate LP failed (status {res.status}): "
+            f"{res.message}")
+    return res.x[:p], res.x[p:]
+
+
+def lexmm_route(problem: AllocationProblem, level_gamma: np.ndarray
+                ) -> tuple[np.ndarray, int]:
+    """Exact lexicographic max-min fill with optimal routing.
+
+    ``level_gamma[n, i]`` is the mechanism's level rate of user n on server
+    i — ``w_n`` masked by eligibility for the global-share mechanisms (the
+    router requires it server-independent per user and refuses otherwise).
+    Returns ``(x (N, K), stages)`` where ``stages`` counts the certified
+    common-level increments (one per freeze batch, <= N).
+    """
+    linprog, sparse = _highs()
+    n, k = level_gamma.shape
+    lg_max = level_gamma.max(axis=1, initial=0.0)
+    spread = np.where(level_gamma > 0, np.abs(level_gamma - lg_max[:, None]),
+                      0.0)
+    if (spread > _RATE_RTOL * np.maximum(lg_max[:, None], 1e-300)).any():
+        raise ValueError(
+            "lexmm requires a server-independent level rate per user (the "
+            "global-share mechanisms); per-server-rate mechanisms route "
+            "through the level fill instead")
+    rate = problem.weights * lg_max                   # tasks per unit level
+    in_scope = rate > 0
+    if not in_scope.any():
+        return np.zeros((n, k)), 0
+
+    users = np.nonzero(in_scope)[0]
+    net = RoutingNetwork(problem, level_gamma > 0, users)
+    # arc variables are in cap_scale-normalized task units and rates are
+    # max-normalized, so every LP coefficient is O(1) no matter how the
+    # instance is scaled (the internal level absorbs both factors;
+    # scatter() undoes the capacity one at the end)
+    r_scaled = rate[users] / rate[users].max()
+    t_eq = np.zeros(users.shape[0])                   # frozen totals (scaled)
+    active = np.ones(users.shape[0], dtype=bool)
+    level = 0.0
+    stages = 0
+    x_arc = np.zeros(net.num_arcs)
+
+    while active.any():
+        stages += 1
+        if stages > users.shape[0] + 1:               # theory: <= |users|
+            raise RuntimeError("lexmm did not converge in |users| stages")
+        act_idx = np.nonzero(active)[0]
+        # --- certify the largest common increment delta ------------------
+        # one shared delta column subtracts rate_u from every active row
+        b_eq = np.where(active, r_scaled * level, t_eq)
+        x_arc, extra = _solve_lp(
+            linprog, sparse, net,
+            [(act_idx, r_scaled[act_idx])], np.array([-1.0]), b_eq)
+        delta = float(extra[0])
+        level += delta
+        # --- freeze the blocked users at the certified level -------------
+        cand = act_idx.copy()
+        b_eq = np.where(active, r_scaled * level, t_eq)
+        while cand.size:
+            cols = [(np.array([u]), np.array([r_scaled[u]])) for u in cand]
+            _, eps = _solve_lp(linprog, sparse, net, cols,
+                               np.full(cand.size, -1.0), b_eq)
+            raisable = eps > _BLOCK_RTOL * max(level, 1e-300)
+            if not raisable.any():
+                break                                 # all remaining blocked
+            cand = cand[~raisable]
+        blocked = cand
+        if blocked.size == 0:
+            # cannot happen for a polytope (see module docstring); freeze
+            # everyone rather than loop forever if fp noise defeats the
+            # certificate
+            blocked = act_idx
+        t_eq[blocked] = r_scaled[blocked] * level
+        active[blocked] = False
+
+    return net.scatter(x_arc, (n, k)), stages

@@ -40,11 +40,26 @@ Strategies
     upper bound the pinned tests compare against (the legacy
     epsilon-increment filler placed greedily); numpy-only.
 
-Guarantees: ``level`` preserves each mechanism's own guarantee set.
-``headroom``/``bestfit`` guarantee feasibility only — they trade the
-worked-example-exact totals for measurably less stranded capacity on
-contended instances (the property tests pin this per mechanism x strategy
-pair; see the README table).
+``lexmm``
+    Exact lexicographic max-min routing (``flowrouter.lexmm_route``). For
+    the global-share mechanisms each saturation event is certified by a
+    flow feasibility problem on the users -> eligible servers -> resource
+    capacities network instead of a headroom-proportional guess, then the
+    blocked users are lexicographically frozen and the fill continues —
+    the standard water-filling-via-flow construction, so it reproduces the
+    worked-example totals exactly AND packs at least as tightly as
+    ``headroom`` (measured: tighter than ``bestfit`` on the pinned dense
+    instance). For PS-DSF the per-server water levels ARE the mechanism
+    (no routing freedom) and ``server_fill_rdm`` is already the per-server
+    lexicographic optimum, so ``lexmm`` is the identity on the level fill.
+
+Guarantees: ``level`` and ``lexmm`` preserve each mechanism's own
+guarantee set (``lexmm`` additionally restores the global-share
+mechanisms' *ideal* max-min level that per-server sweeps and heuristic
+routing can lose). ``headroom``/``bestfit`` guarantee feasibility only —
+they trade the worked-example-exact totals for measurably less stranded
+capacity on contended instances (the property tests pin this per
+mechanism x strategy pair; see the README table).
 """
 from __future__ import annotations
 
@@ -152,6 +167,11 @@ register_placement(PlacementStrategy(
 register_placement(PlacementStrategy(
     "bestfit", "greedy best-fit routing — the strandedness upper bound "
     "(numpy only)", jax_backend=False, mechanism_exact=False))
+register_placement(PlacementStrategy(
+    "lexmm", "exact lexicographic max-min routing via flow-certified "
+    "level increments (global-share mechanisms; identity on PS-DSF's "
+    "per-server fill — jitted entry points accept it, the certificates "
+    "themselves solve host-side)", jax_backend=True, mechanism_exact=True))
 
 
 # ---------------------------------------------------------------------------
@@ -661,8 +681,10 @@ def solve_with_placement(
     ``level_gamma[n, i]`` is the mechanism's fill rate of user n on server i
     (gamma for PS-DSF, the masked score weight for the baselines);
     ``per_server_rates`` says which family it is — PS-DSF's per-server
-    water levels route via repack-and-refill, the global-share mechanisms
-    via the routed global fill (see module docstring). The returned
+    water levels route via repack-and-refill (``lexmm``: identity — the
+    per-server fill is already the per-server lexicographic optimum), the
+    global-share mechanisms via the routed global fill or the exact
+    ``lexmm`` flow router (see module docstring). The returned
     ``SolveInfo`` records the strategy and the stranded-capacity fraction.
     """
     get_placement(placement)                       # validate early
@@ -676,10 +698,20 @@ def solve_with_placement(
         x, info = sweep_fixed_point(fill, problem.num_users,
                                     problem.num_servers, scale, x0=x0,
                                     **sweep_kw)
-        if placement != "level":
+        if placement in ("headroom", "bestfit"):
             x, info = repack_refill(
                 problem, level_gamma, fill, x, info, scale, mode=mode,
                 greedy=placement == "bestfit", **sweep_kw)
+        # placement == "lexmm" with per-server rates: the per-server fill
+        # is already the per-server lexicographic optimum — identity
+    elif placement == "lexmm":
+        if mode != "rdm":
+            raise ValueError("routed placement supports RDM level fills only")
+        from .flowrouter import lexmm_route
+        x, stages = lexmm_route(problem, level_gamma)
+        # flow-certified exact fill: each stage's increment is proven by an
+        # LP certificate, nothing iterates toward a residual
+        info = SolveInfo(stages, True, 0.0)
     else:
         if mode != "rdm":
             raise ValueError("routed placement supports RDM level fills only")

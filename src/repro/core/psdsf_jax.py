@@ -280,6 +280,10 @@ def _repack_refill_core(demands, capacities, weights, gamma, x, rounds,
 
 
 def _check_placement(placement: str) -> None:
+    """Trace-time gate shared by the jitted entry points. ``lexmm`` passes:
+    for the PS-DSF regimes it is the identity on the level solve, so the
+    jitted paths realize it exactly (the flow certificates only exist for
+    the global-share mechanisms, whose jitted twins gate it themselves)."""
     from .placement import get_placement
     if not get_placement(placement).jax_backend:
         raise ValueError(f"placement {placement!r} has no jitted mirror "
@@ -305,8 +309,10 @@ def psdsf_solve_jax(demands, capacities, weights, gamma, *, x0=None,
     warm start changes only the round count, not the solution.
 
     ``placement="headroom"`` follows the level solve with jitted
-    repack-and-refill passes (``_repack_refill_core``); ``"bestfit"`` is
-    numpy-only and rejected here.
+    repack-and-refill passes (``_repack_refill_core``); ``"lexmm"`` is the
+    identity on the level solve (PS-DSF's per-server fill is already the
+    per-server lexicographic optimum — see ``flowrouter``); ``"bestfit"``
+    is numpy-only and rejected here.
     """
     _check_placement(placement)
     n, k = gamma.shape

@@ -78,10 +78,14 @@ class ChurnSimulator:
     cold and record the round-count gap (used by the ``dynamic_churn``
     benchmark row). ``mode`` ("rdm"/"tdm") is the legacy PS-DSF-regime
     spelling, kept as an alias. ``placement`` selects the routing strategy
-    per tick ("level" or "headroom" — the jitted mirrors; "bestfit" is
-    numpy-only and rejected): headroom re-routes via the one-shot global
-    fill (global-share mechanisms; inherently cold) or repack-and-refill
-    passes after the warm sweep (PS-DSF).
+    per tick ("level", "headroom" or "lexmm"; "bestfit" is numpy-only and
+    rejected): headroom re-routes via the one-shot global fill
+    (global-share mechanisms; inherently cold) or repack-and-refill passes
+    after the warm sweep (PS-DSF); lexmm is the identity on the PS-DSF
+    level tick (already the per-server lexicographic optimum) and runs the
+    exact host-side flow router per tick for the global-share mechanisms
+    (one-shot exact — warm starts have nothing to speed up, and
+    ``rounds`` then reports the router's freeze stages).
     """
 
     def __init__(self, problem: AllocationProblem, mode: Optional[str] = None,
@@ -147,6 +151,9 @@ class ChurnSimulator:
 
     def _solve(self, x0) -> tuple[np.ndarray, int, float]:
         import jax.numpy as jnp
+        if (self.placement == "lexmm"
+                and self.mechanism not in ("psdsf-rdm", "psdsf-tdm")):
+            return self._solve_lexmm_host()
         x, rounds, resid = self._resolve(
             self._demands, self._caps, self._weights, self._elig,
             jnp.asarray(self.active), jnp.asarray(self.cap_scale, jnp.float32),
@@ -154,6 +161,21 @@ class ChurnSimulator:
             mechanism=self.mechanism, max_rounds=self.max_rounds,
             tol=self.tol, placement=self.placement)
         return np.array(x, dtype=np.float64), int(rounds), float(resid)
+
+    def _solve_lexmm_host(self) -> tuple[np.ndarray, int, float]:
+        """Exact flow-routed re-solve for the global-share mechanisms: the
+        lexmm certificates are host-side LP solves (no XLA mirror), so the
+        tick recomputes the level-rate matrix on the effective capacities,
+        masks departed users out of the eligibility graph and runs
+        ``flowrouter.lexmm_route`` from scratch (it is one-shot exact)."""
+        from repro.core.baselines import level_rate_matrix
+        from repro.core.flowrouter import lexmm_route
+
+        prob_eff = self._effective_problem()
+        lg = level_rate_matrix(prob_eff, self.mechanism)
+        lg = np.where(self.active[:, None], lg, 0.0)
+        x, stages = lexmm_route(prob_eff, lg)
+        return x, stages, 0.0
 
     def step(self, events: Sequence[ChurnEvent], time_now: float
              ) -> ChurnRecord:
@@ -190,12 +212,11 @@ class ChurnSimulator:
 
     # -- telemetry ----------------------------------------------------------
     def _min_vds(self) -> tuple[float, int]:
-        from repro.kernels.psdsf_vds.ops import min_vds_padded
+        from repro.core.dynamic import min_vds_guarded
 
         g = gamma_matrix(self._effective_problem())
-        mn, _ = min_vds_padded(self.x.sum(axis=1) / self.problem.weights,
-                               np.where(self.active[:, None], g, 0.0),
-                               interpret=self.interpret_vds)
+        mn, _ = min_vds_guarded(self.x, self.problem.weights, g,
+                                 self.active, interpret=self.interpret_vds)
         i = int(np.argmin(mn))
         return float(mn[i]), i
 
@@ -242,6 +263,11 @@ def _resolve_fn():
                                        mechanism)
             lg = jnp.where(active[:, None], lg, 0.0)
             mode = "rdm"
+        if placement == "lexmm" and not psdsf:
+            # guarded in ChurnSimulator._solve (host-side flow router);
+            # reaching the trace means a caller bypassed it
+            raise ValueError("lexmm for global-share mechanisms solves "
+                             "host-side, not in the jitted resolve")
         if placement == "headroom" and not psdsf:
             # global-share mechanisms route via the one-shot exact fill;
             # there is no fixed point to warm-start

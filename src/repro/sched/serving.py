@@ -90,13 +90,25 @@ def admitted_rates(groups: Sequence[ReplicaGroup],
 
 class DynamicDispatcher:
     """Asynchronous per-group PS-DSF ticks for tenant churn (Section III-D /
-    the Section V experiment, at the serving layer)."""
+    the Section V experiment, at the serving layer).
+
+    ``engine``/``precision``/``placement`` thread straight through to
+    ``DistributedPSDSF`` (the jitted tick engine, its dtype, and the
+    placement strategy), matching the knobs ``ChurnSimulator`` and
+    ``admitted_rates`` already expose — a dispatcher ticked to equilibrium
+    reproduces ``admitted_rates(..., mechanism="psdsf-<mode>")`` quotas
+    (regression-pinned in tests/test_lexmm.py).
+    """
 
     def __init__(self, groups: Sequence[ReplicaGroup],
-                 tenants: Sequence[Tenant], mode: str = "rdm"):
+                 tenants: Sequence[Tenant], mode: str = "rdm",
+                 engine: str = "numpy", precision: str = "highest",
+                 placement: str = "level"):
         self.groups = list(groups)
         self.tenants = list(tenants)
-        self.sim = DistributedPSDSF(dispatch_problem(groups, tenants), mode)
+        self.sim = DistributedPSDSF(dispatch_problem(groups, tenants), mode,
+                                    engine=engine, precision=precision,
+                                    placement=placement)
 
     def set_active(self, tenant_name: str, active: bool):
         idx = [t.name for t in self.tenants].index(tenant_name)

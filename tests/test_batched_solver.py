@@ -12,6 +12,8 @@ Covers the contracts the engine is built on:
   * ``psdsf_resolve_batched`` (restricted sweep + verification) certifies
     scenarios at the same tolerance as cold solves.
 """
+import functools
+
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -24,25 +26,13 @@ from repro.core.psdsf_jax import (batch_problems, psdsf_resolve_batched,
                                   psdsf_solve_batched, psdsf_solve_jax,
                                   unbatch_solutions)
 
+from conftest import random_problems as _random_problems
 
-def random_problems(num, seed=0, max_users=10, max_servers=5,
-                    max_resources=4):
-    rng = np.random.default_rng(seed)
-    probs = []
-    while len(probs) < num:
-        n = rng.integers(2, max_users + 1)
-        k = rng.integers(1, max_servers + 1)
-        r = rng.integers(1, max_resources + 1)
-        d = rng.uniform(0.05, 2.0, (n, r))
-        c = rng.uniform(2.0, 30.0, (k, r))
-        w = rng.uniform(0.5, 2.0, n)
-        e = (rng.random((n, k)) > 0.25).astype(float)
-        prob = AllocationProblem(d, c, w, e)
-        g = gamma_matrix(prob)
-        keep = g.sum(axis=1) > 0
-        if keep.sum() >= 2:
-            probs.append(prob.restrict_users(keep))
-    return probs
+#: this suite historically draws slightly larger instances (the batching
+#: padding paths need heterogeneous N/K) — same shared generator, bigger
+#: defaults
+random_problems = functools.partial(_random_problems, max_users=10,
+                                    max_servers=5, max_resources=4)
 
 
 def solve_one(prob, mode, x0=None, max_rounds=64):

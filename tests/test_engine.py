@@ -18,7 +18,7 @@ Covers the engine's load-bearing claims:
 import numpy as np
 import pytest
 
-from repro.core import (Allocation, AllocationProblem, ConvergenceError,
+from repro.core import (Allocation, ConvergenceError,
                         SolveInfo, ensure_converged, gamma_matrix,
                         get_allocator, list_allocators, solve,
                         solve_psdsf_rdm)
@@ -31,23 +31,7 @@ ALL_MECHANISMS = ("cdrf", "cdrfh", "drf", "psdsf-rdm", "psdsf-tdm", "tsf",
 LEVEL_FILL = ("cdrfh", "tsf", "cdrf")
 
 
-def random_problems(num, seed=0, max_users=8, max_servers=4,
-                    max_resources=3):
-    rng = np.random.default_rng(seed)
-    probs = []
-    while len(probs) < num:
-        n = rng.integers(2, max_users + 1)
-        k = rng.integers(1, max_servers + 1)
-        r = rng.integers(1, max_resources + 1)
-        d = rng.uniform(0.05, 2.0, (n, r))
-        c = rng.uniform(2.0, 30.0, (k, r))
-        w = rng.uniform(0.5, 2.0, n)
-        e = (rng.random((n, k)) > 0.25).astype(float)
-        prob = AllocationProblem(d, c, w, e)
-        keep = gamma_matrix(prob).sum(axis=1) > 0
-        if keep.sum() >= 2:
-            probs.append(prob.restrict_users(keep))
-    return probs
+from conftest import random_problems  # shared seeded instance generator
 
 
 class TestRegistry:

@@ -30,31 +30,15 @@ from repro.core.instances import (dense_random_instance, fig1_instance,
 from repro.core.placement import repack_pass, routed_level_fill
 from repro.core.properties import (check_feasible_rdm, check_feasible_tdm)
 
+from conftest import random_problems  # shared seeded instance generator
+
 LEVEL_FILL = ("cdrfh", "tsf", "cdrf")
 SWEEP = ("psdsf-rdm", "psdsf-tdm") + LEVEL_FILL
 
 
-def random_problems(num, seed=0, max_users=8, max_servers=4,
-                    max_resources=3):
-    rng = np.random.default_rng(seed)
-    probs = []
-    while len(probs) < num:
-        n = rng.integers(2, max_users + 1)
-        k = rng.integers(1, max_servers + 1)
-        r = rng.integers(1, max_resources + 1)
-        prob = AllocationProblem(rng.uniform(0.05, 2.0, (n, r)),
-                                 rng.uniform(2.0, 30.0, (k, r)),
-                                 rng.uniform(0.5, 2.0, n),
-                                 (rng.random((n, k)) > 0.25).astype(float))
-        keep = gamma_matrix(prob).sum(axis=1) > 0
-        if keep.sum() >= 2:
-            probs.append(prob.restrict_users(keep))
-    return probs
-
-
 class TestRegistry:
     def test_strategies_registered(self):
-        assert list_placements() == ("bestfit", "headroom", "level")
+        assert list_placements() == ("bestfit", "headroom", "level", "lexmm")
 
     def test_unknown_raises(self):
         with pytest.raises(KeyError, match="unknown placement"):
@@ -66,6 +50,9 @@ class TestRegistry:
         assert get_placement("headroom").jax_backend
         assert not get_placement("headroom").mechanism_exact
         assert not get_placement("bestfit").jax_backend
+        # the exact flow router is the second mechanism-exact strategy
+        assert get_placement("lexmm").mechanism_exact
+        assert get_placement("lexmm").jax_backend
 
 
 class TestLevelGoldenParity:

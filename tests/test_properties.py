@@ -110,6 +110,21 @@ PLACEMENT_PAIR_GUARANTEES = {
     ("tsf", "bestfit"): (check_feasible_rdm,),
     ("cdrf", "headroom"): (check_feasible_rdm,),
     ("cdrf", "bestfit"): (check_feasible_rdm,),
+    # lexmm (ISSUE 4): mechanism-exact, so the PS-DSF pairs keep the
+    # mechanism's full guarantee row (it IS the level fixed point there),
+    # and cdrf regains sharing incentive beyond bare feasibility — the
+    # uniform allocation puts every user at the common level 1/sum(phi),
+    # so the router's first certified increment already covers each user's
+    # uniform entitlement (tsf/cdrfh normalize by a score that is NOT the
+    # constrained monopolization, so the same argument does not apply;
+    # TSF starving constrained users is the paper's point).
+    ("psdsf-rdm", "lexmm"): (check_feasible_rdm, check_sharing_incentive,
+                             check_envy_freeness),
+    ("psdsf-tdm", "lexmm"): (check_feasible_tdm, check_sharing_incentive,
+                             check_envy_freeness, check_pareto_tdm),
+    ("cdrfh", "lexmm"): (check_feasible_rdm,),
+    ("tsf", "lexmm"): (check_feasible_rdm,),
+    ("cdrf", "lexmm"): (check_feasible_rdm, check_sharing_incentive),
 }
 
 
