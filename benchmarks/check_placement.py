@@ -15,7 +15,13 @@ regresses:
     least as tightly as the heuristic it supersedes — dense/tsf: <= 0.379
     — while staying mechanism-exact, which tests/test_lexmm.py pins);
   * an expected row disappeared or reported a non-finite stranded fraction
-    (a silently skipped or NaN-emitting benchmark must not pass the gate).
+    (a silently skipped or NaN-emitting benchmark must not pass the gate);
+  * the warm lexmm router rows (``lexmmwarm_*``, self-certified by
+    ``placement_comparison``) report less than a 2x speedup over the cold
+    reference router or a per-user-total gap above 1e-6 on any of the four
+    pinned (dense/cell x tsf/cdrfh) instances — the ISSUE-6 acceptance:
+    warm re-solves must be fast AND provably exact, never one at the
+    other's expense.
 
 Baseline entries may be ``null`` — presence is then still required but the
 value is unchecked (how a row whose metric is legitimately undefined would
@@ -45,6 +51,13 @@ MUST_IMPROVE = tuple(
 
 #: routed strategies regression-gated against the committed baseline
 GATED_SUFFIXES = ("_headroom", "_bestfit", "_lexmm")
+
+#: warm-router rows gated on speedup AND allocation parity vs cold
+WARM_ROWS = tuple(
+    f"lexmmwarm_{inst}_{mech}" for inst in ("dense", "cell")
+    for mech in ("tsf", "cdrfh"))
+WARM_MIN_SPEEDUP = 2.0
+WARM_PARITY_ATOL = 1e-6
 
 
 def stranded_by_row(rows: list[dict]) -> dict[str, float | None]:
@@ -110,6 +123,29 @@ def main(argv=None) -> int:
                 f"committed headroom value ({head_committed:.4f}) — the "
                 f"exact router must pack at least as tightly as the "
                 f"heuristic it supersedes")
+    derived = {row["name"]: row.get("derived", "")
+               for row in json.loads(smoke.read_text())}
+    for name in WARM_ROWS:
+        d = derived.get(name)
+        if d is None:
+            failures.append(f"missing warm-router row {name} "
+                            f"(benchmark skipped?)")
+            continue
+        sp = re.search(r"speedup=([\d.]+)x", d)
+        md = re.search(r"maxdiff=(\S+)", d)
+        if not sp or not md:
+            failures.append(f"{name}: derived field lacks speedup=/maxdiff= "
+                            f"({d!r})")
+            continue
+        speedup, maxdiff = float(sp.group(1)), float(md.group(1))
+        if speedup < WARM_MIN_SPEEDUP:
+            failures.append(
+                f"{name}: warm re-solve only {speedup:.2f}x over the cold "
+                f"router (gate: >= {WARM_MIN_SPEEDUP}x)")
+        if not math.isfinite(maxdiff) or maxdiff > WARM_PARITY_ATOL:
+            failures.append(
+                f"{name}: warm/cold per-user totals differ by {maxdiff:.2e} "
+                f"(gate: <= {WARM_PARITY_ATOL})")
     if failures:
         print("placement gate FAILED:")
         for f in failures:
@@ -117,7 +153,8 @@ def main(argv=None) -> int:
         return 1
     print(f"placement gate OK: {len(want)} rows within {TOLERANCE} of "
           f"baseline; headroom < level and lexmm <= committed headroom on "
-          f"{len(MUST_IMPROVE)} pairs")
+          f"{len(MUST_IMPROVE)} pairs; warm router >= {WARM_MIN_SPEEDUP}x "
+          f"and exact to {WARM_PARITY_ATOL} on {len(WARM_ROWS)} rows")
     return 0
 
 

@@ -1,0 +1,153 @@
+"""Render ``docs/guarantees.md`` from the guarantee dicts in
+``tests/test_properties.py``.
+
+The property suite is the single source of truth for which Section II-A
+properties each mechanism (and each mechanism x placement pair) GUARANTEES
+— those dicts drive hypothesis tests on random heterogeneous instances, so
+a claim in them is continuously enforced, not aspirational. This script
+renders the same dicts as the markdown matrix committed at
+``docs/guarantees.md`` so readers never see a table the tests don't back.
+
+Usage:
+    python benchmarks/gen_guarantees.py                 # print the doc
+    python benchmarks/gen_guarantees.py --write PATH    # write it
+    python benchmarks/gen_guarantees.py --check PATH    # CI drift gate:
+        exit 1 if PATH differs from the freshly rendered doc
+
+The CI fast lane runs ``--check docs/guarantees.md``; to update the doc
+after editing the dicts, re-run with ``--write docs/guarantees.md`` and
+commit the result.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SOURCE = ROOT / "tests" / "test_properties.py"
+
+#: check-function name -> (column label, column order)
+PROPERTY_COLUMNS = (
+    ("check_feasible_rdm", "feasible (RDM)"),
+    ("check_feasible_tdm", "feasible (TDM)"),
+    ("check_sharing_incentive", "sharing incentive"),
+    ("check_envy_freeness", "envy-free"),
+    ("check_pareto_tdm", "Pareto (TDM)"),
+)
+
+
+def _load_guarantees():
+    """Parse the dicts out of the test module (single source of truth).
+
+    AST-parsed rather than imported so the emitter runs in environments
+    without ``hypothesis`` (the module importorskips it at import time);
+    keys come back as the literal strings/tuples and values as tuples of
+    check-function NAMES. ``test_guarantee_matrix_covers_registry`` keeps
+    the parsed dicts honest against the live allocator registry.
+    """
+    tree = ast.parse(SOURCE.read_text(), filename=str(SOURCE))
+    dicts = {}
+    for node in tree.body:
+        if (isinstance(node, ast.Assign)
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id in ("ALLOCATOR_GUARANTEES",
+                                           "PLACEMENT_PAIR_GUARANTEES")):
+            out = {}
+            for k, v in zip(node.value.keys, node.value.values):
+                key = ast.literal_eval(k)
+                out[key] = tuple(elt.id for elt in v.elts)
+            dicts[node.targets[0].id] = out
+    missing = {"ALLOCATOR_GUARANTEES",
+               "PLACEMENT_PAIR_GUARANTEES"} - set(dicts)
+    if missing:
+        raise RuntimeError(f"could not find {sorted(missing)} in {SOURCE}")
+    return dicts["ALLOCATOR_GUARANTEES"], dicts["PLACEMENT_PAIR_GUARANTEES"]
+
+
+def _row(label: str, check_names) -> str:
+    names = set(check_names)
+    cells = [" yes " if col in names else " — " for col, _ in PROPERTY_COLUMNS]
+    return f"| {label} |" + "|".join(cells) + "|"
+
+
+def render() -> str:
+    allocator, pairs = _load_guarantees()
+    header = ("| " + " | ".join(["mechanism"]
+                                + [lbl for _, lbl in PROPERTY_COLUMNS])
+              + " |")
+    rule = "|" + "|".join(["---"] * (len(PROPERTY_COLUMNS) + 1)) + "|"
+    lines = [
+        "# Guarantee matrix",
+        "",
+        "<!-- GENERATED FILE — edit tests/test_properties.py, then run",
+        "     `python benchmarks/gen_guarantees.py --write docs/guarantees.md`.",
+        "     CI checks this file against the dicts on every push. -->",
+        "",
+        "Every cell below is backed by a hypothesis property test on random",
+        "heterogeneous instances (`tests/test_properties.py`): `yes` means",
+        "the property is asserted for that row on every run, `—` means the",
+        "mechanism/pair intentionally does NOT claim it (the paper's",
+        "comparison table — the baselines violating these properties on",
+        "heterogeneous servers is PS-DSF's motivation, not a bug).",
+        "",
+        "## Mechanisms (placement=`level`, each mechanism's own fill)",
+        "",
+        header,
+        rule,
+    ]
+    for mech in sorted(allocator):
+        lines.append(_row(f"`{mech}`", allocator[mech]))
+    lines += [
+        "",
+        "## Mechanism × placement pairs (routed strategies)",
+        "",
+        "`level` rows are the mechanism rows above. The routed heuristics",
+        "(`headroom`/`bestfit`) trade mechanism-exact totals for packing, so",
+        "they claim feasibility only; `lexmm` is mechanism-exact, so the",
+        "PS-DSF pairs keep their full row and `cdrf` regains sharing",
+        "incentive (see the dict comments for the argument).",
+        "",
+        header.replace("mechanism", "mechanism × placement"),
+        rule,
+    ]
+    for mech, placement in sorted(pairs):
+        lines.append(_row(f"`{mech}` × `{placement}`",
+                          pairs[(mech, placement)]))
+    lines += [
+        "",
+        "Regenerate with `python benchmarks/gen_guarantees.py --write "
+        "docs/guarantees.md`.",
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--write", metavar="PATH",
+                    help="write the rendered doc to PATH")
+    ap.add_argument("--check", metavar="PATH",
+                    help="exit 1 if PATH differs from the rendered doc")
+    args = ap.parse_args(argv)
+    doc = render()
+    if args.check:
+        committed = Path(args.check).read_text()
+        if committed != doc:
+            print(f"guarantees drift: {args.check} does not match "
+                  f"tests/test_properties.py — regenerate with "
+                  f"`python benchmarks/gen_guarantees.py --write "
+                  f"{args.check}` and commit")
+            return 1
+        print(f"guarantees OK: {args.check} matches the property-test dicts")
+        return 0
+    if args.write:
+        Path(args.write).write_text(doc)
+        print(f"wrote {args.write}")
+        return 0
+    print(doc, end="")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,79 @@
+"""Docstring-coverage lint for the public API of ``core/`` and ``sched/``.
+
+The docs layer (``docs/``) points readers INTO the code — paper_map.md says
+"Eq. 6 is ``psdsf_weights``" and stops, trusting the symbol's own docstring
+to carry the details. That only works if public symbols actually have
+docstrings, so the CI fast lane enforces a coverage floor here instead of
+hoping review catches omissions. Implemented in-repo with ``ast`` (the
+container has no pydocstyle/interrogate) and intentionally minimal: it
+checks PRESENCE on public symbols, not style.
+
+Public = module itself, plus every module-level function, class, and method
+whose name doesn't start with ``_`` (dunders are private here too —
+``__init__`` is documented by its class). Functions nested inside function
+bodies are closures, not API, and are skipped; a public method on a
+private class still counts, since callers receive those instances.
+
+Usage: python benchmarks/lint_docstrings.py [--min PERCENT]
+Exits 1 when coverage falls below the floor, listing every missing symbol.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+PACKAGES = ("src/repro/core", "src/repro/sched")
+DEFAULT_MIN = 95.0
+
+
+def _public(name: str) -> bool:
+    return not name.startswith("_")
+
+
+def audit_module(path: Path):
+    """Yield ``(symbol, has_docstring)`` for the module and its public API."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    rel = path.relative_to(ROOT)
+    yield f"{rel} (module)", ast.get_docstring(tree) is not None
+    defs = (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+    stack = [node for node in tree.body if isinstance(node, defs)]
+    while stack:
+        node = stack.pop()
+        if isinstance(node, ast.ClassDef):
+            # methods and nested classes are API; closures below are not
+            stack.extend(n for n in node.body if isinstance(n, defs))
+        if _public(node.name):
+            yield (f"{rel}:{node.lineno} {node.name}",
+                   ast.get_docstring(node) is not None)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--min", type=float, default=DEFAULT_MIN,
+                    help=f"coverage floor in percent "
+                         f"(default {DEFAULT_MIN})")
+    args = ap.parse_args(argv)
+    total, documented, missing = 0, 0, []
+    for pkg in PACKAGES:
+        for path in sorted((ROOT / pkg).glob("*.py")):
+            for symbol, ok in audit_module(path):
+                total += 1
+                documented += ok
+                if not ok:
+                    missing.append(symbol)
+    pct = 100.0 * documented / total if total else 100.0
+    status = "OK" if pct >= args.min else "FAILED"
+    print(f"docstring lint {status}: {documented}/{total} public symbols "
+          f"documented ({pct:.1f}%, floor {args.min:.1f}%) across "
+          f"{', '.join(PACKAGES)}")
+    if missing:
+        print("undocumented:")
+        for symbol in missing:
+            print(f"  - {symbol}")
+    return 0 if pct >= args.min else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

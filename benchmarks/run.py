@@ -85,11 +85,11 @@ def _json_safe(rows):
 
 
 def _t(fn, *args, repeat=3, **kw):
-    fn(*args, **kw)                       # warmup / compile
-    t0 = time.perf_counter()
-    for _ in range(repeat):
-        out = fn(*args, **kw)
-    return (time.perf_counter() - t0) / repeat * 1e6, out
+    # one clock discipline for SolveInfo.stage_ms and the CSV rows: the
+    # warm-up-then-mean timer lives in repro.core.trace (imported lazily so
+    # --help stays dependency-free)
+    from repro.core.trace import timed_us
+    return timed_us(fn, *args, repeat=repeat, **kw)
 
 
 def fig1_examples():
@@ -424,6 +424,28 @@ def placement_comparison():
             recovered[(inst_name, mech)] = (
                 (stranded["level"] - stranded["headroom"]) / gap
                 if gap > 1e-9 else float("nan"))
+        # --- warm-vs-cold lexmm router rows (self-certified) -------------
+        # warm = a persistent RouterState re-solving against its verified
+        # stage trace (the churn-tick steady state); cold = the PR-4
+        # one-shot reference router, network build included. maxdiff is the
+        # per-user-total gap between the two allocations — the row carries
+        # its own exactness proof and check_placement.py gates BOTH the
+        # >= 2x speedup and the 1e-6 parity.
+        from repro.core.baselines import level_rate_matrix
+        from repro.core.flowrouter import RouterState, lexmm_route_cold
+        for mech in ("tsf", "cdrfh"):
+            lg = level_rate_matrix(prob, mech)
+            router = RouterState(prob, lg)
+            router.solve()                       # establish the stage trace
+            warm_us, (xw, wstats) = _t(router.resolve, repeat=3)
+            cold_us, (xc, _) = _t(lexmm_route_cold, prob, lg,
+                                  repeat=1 if inst_name == "cell" else 3)
+            maxdiff = float(np.abs(xw.sum(axis=1) - xc.sum(axis=1)).max())
+            print(f"lexmmwarm_{inst_name}_{mech},{warm_us:.0f},"
+                  f"cold_us={cold_us:.0f} speedup={cold_us / warm_us:.2f}x "
+                  f"maxdiff={maxdiff:.2e} stages={wstats.stages} "
+                  f"mode={wstats.mode} lp_calls={wstats.lp_calls} "
+                  f"lp_iters={wstats.lp_iters}")
     dense_tsf = recovered[("dense", "tsf")]
     # informational line, deliberately NOT name,us,derived-shaped: a
     # 0-us summary row must not enter the JSON perf artifact

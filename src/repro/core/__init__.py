@@ -9,7 +9,9 @@ from .placement import (PlacementStrategy, SolveInfo, get_placement,
                         routed_level_fill, server_fill_rdm, server_fill_tdm,
                         solve_with_placement, stranded_fraction,
                         sweep_fixed_point)
-from .flowrouter import FlowRouterUnavailable, lexmm_route
+from .flowrouter import (FlowRouterUnavailable, RouterState, RouterStats,
+                         lexmm_route, lexmm_route_cold)
+from .trace import Tracer, timed_us
 from .psdsf import (algorithm1_literal, solve_psdsf_rdm, solve_psdsf_tdm)
 from .baselines import (level_rate_matrix, score_weights, solve_cdrf,
                         solve_cdrfh, solve_drf_pooled, solve_drf_single_pool,
@@ -27,7 +29,8 @@ __all__ = [
     "server_fill_rdm", "server_fill_tdm", "sweep_fixed_point",
     "PlacementStrategy", "get_placement", "list_placements",
     "register_placement", "routed_level_fill", "solve_with_placement",
-    "stranded_fraction", "lexmm_route", "FlowRouterUnavailable",
+    "stranded_fraction", "lexmm_route", "lexmm_route_cold", "RouterState",
+    "RouterStats", "FlowRouterUnavailable", "Tracer", "timed_us",
     "solve_cdrfh", "solve_tsf", "solve_cdrf", "solve_drf_single_pool",
     "solve_drf_pooled", "solve_level_fill", "level_rate_matrix",
     "score_weights", "uniform_allocation", "DistributedPSDSF",

@@ -116,6 +116,9 @@ class DistributedPSDSF:
         self.x = np.zeros((problem.num_users, problem.num_servers))
         self.active = np.ones(problem.num_users, dtype=bool)
         self._rng = np.random.default_rng(seed)
+        self._router = None          # persistent lexmm router (comparator)
+        self._router_mech: Optional[str] = None
+        self.router_stats = None     # RouterStats of the last routed call
         if engine == "jax":
             import jax.numpy as jnp
             # "highest" ticks in f64 (bit-comparable to the numpy oracle even
@@ -138,6 +141,7 @@ class DistributedPSDSF:
 
     # -- churn -------------------------------------------------------------
     def set_active(self, user: int, active: bool) -> None:
+        """Arrival/departure: departures also release the user's tasks."""
         self.active[user] = active
         if not active:
             self.x[user, :] = 0.0      # departing user releases its tasks
@@ -145,6 +149,8 @@ class DistributedPSDSF:
     # -- the per-server procedure -------------------------------------------
     def tick(self, servers: Optional[Iterable[int]] = None,
              shuffle: bool = False) -> None:
+        """One asynchronous round of Algorithm 1: each listed server (all
+        by default) runs its local PS-DSF procedure against current state."""
         p = self.problem
         idx: Sequence[int] = (range(p.num_servers) if servers is None
                               else list(servers))
@@ -193,6 +199,32 @@ class DistributedPSDSF:
             x.block_until_ready()
         self.x = np.array(x, dtype=np.float64)   # copy: keep self.x writable
 
+    # -- exact routed comparator ---------------------------------------------
+    def routed_allocation(self, mechanism: str = "tsf") -> Allocation:
+        """Exact lexmm-routed allocation of a *global-share* mechanism under
+        the current activity mask.
+
+        PS-DSF's own tick needs no flow router (the per-server fill IS the
+        per-server lexicographic optimum), but the Section V comparisons
+        read a global-share quota next to it. This keeps one persistent warm
+        ``flowrouter.RouterState`` per mechanism and hands it the
+        ``set_active`` churn as an activity delta — an unchanged mask
+        re-verifies the cached stage trace (one LP per stage), departures
+        re-solve only the unfrozen suffix, arrivals fall back to a full
+        matrix-warm solve flagged in ``self.router_stats.warm_fallbacks``.
+        """
+        from repro.core.baselines import level_rate_matrix
+
+        from .flowrouter import RouterState
+
+        if self._router is None or self._router_mech != mechanism:
+            lg = level_rate_matrix(self.problem, mechanism)
+            self._router = RouterState(self.problem, lg)
+            self._router_mech = mechanism
+        x, stats = self._router.resolve(active=self.active)
+        self.router_stats = stats
+        return Allocation(self.problem, x)
+
     # -- telemetry ----------------------------------------------------------
     def min_vds(self, interpret: bool = True):
         """Per-server (min normalized VDS, argmin user) over active users —
@@ -209,7 +241,9 @@ class DistributedPSDSF:
                                 self.active, interpret=interpret)
 
     def allocation(self) -> Allocation:
+        """Snapshot of the current state as an :class:`Allocation`."""
         return Allocation(self.problem, self.x.copy())
 
     def utilization(self) -> np.ndarray:
+        """(K, R) resource utilization of the current state."""
         return self.allocation().utilization()

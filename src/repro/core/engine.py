@@ -54,6 +54,9 @@ class ConvergenceError(RuntimeError):
 
 
 class Allocator(Protocol):
+    """Callable signature every registered mechanism implements:
+    ``(problem, **kw) -> (Allocation, SolveInfo)``."""
+
     def __call__(self, problem: AllocationProblem, **kw
                  ) -> Tuple[Allocation, SolveInfo]: ...
 
@@ -67,6 +70,8 @@ SWEEP_MECHANISMS = ("psdsf-rdm", "psdsf-tdm", "cdrfh", "tsf", "cdrf")
 
 
 def register_allocator(name: str) -> Callable[[Allocator], Allocator]:
+    """Decorator registering an :class:`Allocator` under ``name``
+    (duplicate names raise so a typo can't shadow a mechanism)."""
     def deco(fn: Allocator) -> Allocator:
         if name in _REGISTRY:
             raise ValueError(f"allocator {name!r} already registered")
@@ -76,6 +81,8 @@ def register_allocator(name: str) -> Callable[[Allocator], Allocator]:
 
 
 def get_allocator(name: str) -> Allocator:
+    """Look up a registered mechanism; unknown names raise with the
+    registered list in the message."""
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -84,6 +91,7 @@ def get_allocator(name: str) -> Allocator:
 
 
 def list_allocators() -> Tuple[str, ...]:
+    """Sorted names of every registered mechanism."""
     return tuple(sorted(_REGISTRY))
 
 
@@ -151,6 +159,14 @@ def solve(problem: AllocationProblem, mechanism: str = "psdsf-rdm",
     numpy-only). lexmm under ``backend="jax"`` is the identity on the
     jitted level solve for PS-DSF and runs its LP certificates host-side
     for the global-share mechanisms (``solve_baseline_jax`` routes it).
+
+    lexmm solves go through the warm ``flowrouter.RouterState`` (cached
+    certificate matrices + dual-seeded freeze candidates) and surface the
+    router's observability on the returned ``SolveInfo`` (``lp_calls``,
+    ``lp_iters``, ``stage_ms``, warm-reuse counters); callers that
+    re-solve under churn should hold a ``RouterState`` (or use
+    ``sched.churn.ChurnSimulator``) to also reuse the solved stage trace
+    across ticks.
     """
     if backend not in ("numpy", "jax"):
         raise ValueError(f"backend must be 'numpy' or 'jax': {backend!r}")

@@ -56,6 +56,8 @@ def google_cluster_instance():
 
 
 def per_class_totals(x: np.ndarray, class_of: np.ndarray) -> np.ndarray:
+    """Sum allocation columns by server class: (N, K) x -> (N, 4) totals
+    for the fig6 mix instance's four machine classes."""
     return np.stack([x[:, class_of == c].sum(axis=1) for c in range(4)],
                     axis=1)
 
@@ -163,6 +165,8 @@ def dense_random_instance(num_users: int = 60, num_servers: int = 12,
 
 
 def fig1_instance() -> AllocationProblem:
+    """The paper's Fig. 1 example: 3 users, 2 heterogeneous servers
+    (server 2 has no resource-3 capacity), user 3 weighted 2x."""
     return AllocationProblem(
         demands=np.array([[1.0, 2.0, 10.0], [1.0, 2.0, 1.0],
                           [1.0, 2.0, 0.0]]),
@@ -171,6 +175,8 @@ def fig1_instance() -> AllocationProblem:
 
 
 def fig2_instance() -> AllocationProblem:
+    """The paper's Fig. 2 example: 4 users on the same 2 servers, used to
+    contrast TSF with PS-DSF."""
     return AllocationProblem(
         demands=np.array([[1.5, 1.0, 10.0], [1.0, 2.0, 10.0],
                           [0.5, 1.0, 0.0], [1.0, 0.5, 0.0]]),

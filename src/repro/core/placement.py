@@ -92,12 +92,25 @@ REPACK_MIN_GAIN = 1e-6
 
 @dataclasses.dataclass
 class SolveInfo:
+    """Uniform solve record: convergence, placement, waste and — when the
+    lexmm flow router produced the layout — solver observability (LP call
+    and simplex-iteration totals, warm-reuse counters and per-stage wall
+    times from ``flowrouter.RouterStats``; all default-zero for the
+    iterative solvers, which have no LP layer)."""
+
     rounds: int
     converged: bool
     residual: float
     approx: bool = False     # converged only to the loose tolerance
     placement: str = "level"           # strategy that produced the layout
     stranded_frac: float = float("nan")  # demandable capacity left unused
+    lp_calls: int = 0        # LP certificates solved (lexmm only)
+    lp_iters: int = 0        # simplex iterations across those LPs
+    warm_hits: int = 0       # traced stages reused via verification
+    warm_fallbacks: int = 0  # loud flag: cached trace was unusable
+    solve_ms: float = 0.0    # router wall time (0 for iterative solvers)
+    stage_ms: tuple = ()     # per-stage wall times, stage order
+    router_mode: str = ""    # "warm" / "verify" / "incremental" / "fallback"
 
     @classmethod
     def from_residual(cls, rounds: int, residual: float, scale: float,
@@ -138,6 +151,7 @@ _REGISTRY: Dict[str, PlacementStrategy] = {}
 
 
 def register_placement(strategy: PlacementStrategy) -> PlacementStrategy:
+    """Register a fill strategy by its ``name`` (duplicates raise)."""
     if strategy.name in _REGISTRY:
         raise ValueError(f"placement {strategy.name!r} already registered")
     _REGISTRY[strategy.name] = strategy
@@ -145,6 +159,8 @@ def register_placement(strategy: PlacementStrategy) -> PlacementStrategy:
 
 
 def get_placement(name: str) -> PlacementStrategy:
+    """Look up a registered placement strategy; unknown names raise with
+    the registered list in the message."""
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -153,6 +169,7 @@ def get_placement(name: str) -> PlacementStrategy:
 
 
 def list_placements() -> Tuple[str, ...]:
+    """Sorted names of every registered placement strategy."""
     return tuple(sorted(_REGISTRY))
 
 
@@ -707,11 +724,17 @@ def solve_with_placement(
     elif placement == "lexmm":
         if mode != "rdm":
             raise ValueError("routed placement supports RDM level fills only")
-        from .flowrouter import lexmm_route
-        x, stages = lexmm_route(problem, level_gamma)
+        from .flowrouter import RouterState
+        router = RouterState(problem, level_gamma)
+        x, rstats = router.solve()
         # flow-certified exact fill: each stage's increment is proven by an
         # LP certificate, nothing iterates toward a residual
-        info = SolveInfo(stages, True, 0.0)
+        info = SolveInfo(rstats.stages, True, 0.0,
+                         lp_calls=rstats.lp_calls, lp_iters=rstats.lp_iters,
+                         warm_hits=rstats.warm_hits,
+                         warm_fallbacks=rstats.warm_fallbacks,
+                         solve_ms=rstats.solve_ms, stage_ms=rstats.stage_ms,
+                         router_mode=rstats.mode)
     else:
         if mode != "rdm":
             raise ValueError("routed placement supports RDM level fills only")

@@ -470,6 +470,8 @@ def solve_psdsf_rdm_jax(problem: AllocationProblem, x0=None,
 
 def solve_psdsf_tdm_jax(problem: AllocationProblem, x0=None,
                         max_rounds: int = 64) -> Allocation:
+    """PS-DSF under time-division multiplexing on the jitted jax backend
+    (continuous task fractions; RDM variant is ``solve_psdsf_rdm_jax``)."""
     g = gamma_matrix(problem)
     x, _, _ = psdsf_solve_jax(
         jnp.asarray(problem.demands), jnp.asarray(problem.capacities),

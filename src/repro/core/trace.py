@@ -1,0 +1,74 @@
+"""Lightweight timing spans for solver observability.
+
+The warm lexmm router (``core.flowrouter``) wants per-stage wall times next
+to its LP iteration counts, and ``benchmarks/run.py`` wants the same
+best-of-N call timer it has always used — both live here so the numbers in
+``SolveInfo`` and the benchmark CSV come from one clock discipline
+(``time.perf_counter``, milliseconds) instead of two hand-rolled ones.
+
+Two tools:
+
+* ``Tracer`` — an append-only list of named spans. ``with tracer.span("stage1")``
+  records one span; ``tracer.ms("stage1")`` totals by name; ``tracer.stage_ms()``
+  returns the span durations in record order (what ``SolveInfo.stage_ms``
+  carries). A ``Tracer`` is cheap enough to create per solve and is NOT
+  thread-safe — give each solver its own.
+* ``timed_us(fn, *args, repeat=3)`` — one warm-up call, then the mean wall
+  time of ``repeat`` calls in microseconds. This is the benchmark harness
+  timer (formerly ``benchmarks/run.py::_t``).
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from dataclasses import dataclass
+from typing import Callable, Iterator, List, Optional
+
+
+@dataclass
+class Span:
+    """One completed timing span: a name and its wall duration in ms."""
+
+    name: str
+    ms: float
+
+
+class Tracer:
+    """Collects named wall-time spans (see module docstring)."""
+
+    def __init__(self) -> None:
+        self.spans: List[Span] = []
+
+    @contextlib.contextmanager
+    def span(self, name: str) -> Iterator[None]:
+        """Context manager recording one span; exceptions still record."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.spans.append(Span(name, (time.perf_counter() - t0) * 1e3))
+
+    def ms(self, name: Optional[str] = None) -> float:
+        """Total milliseconds across spans, optionally filtered by name."""
+        return sum(s.ms for s in self.spans
+                   if name is None or s.name == name)
+
+    def stage_ms(self) -> tuple:
+        """Span durations (ms) in record order, as an immutable tuple."""
+        return tuple(s.ms for s in self.spans)
+
+
+def timed_us(fn: Callable, *args, repeat: int = 3, **kw):
+    """Mean wall time of ``fn(*args, **kw)`` over ``repeat`` calls, in us;
+    returns ``(us_per_call, last_result)``.
+
+    One un-timed warm-up call runs first so one-off costs (jit compiles,
+    lazy imports, matrix caches) don't pollute the steady-state number —
+    callers benchmarking *cold* behavior should pass a fresh ``fn`` whose
+    setup happens inside the call.
+    """
+    fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    return (time.perf_counter() - t0) / repeat * 1e6, out

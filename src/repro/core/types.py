@@ -52,14 +52,17 @@ class AllocationProblem:
     # -- sizes ------------------------------------------------------------
     @property
     def num_users(self) -> int:
+        """N — number of users (rows of ``demands``)."""
         return self.demands.shape[0]
 
     @property
     def num_servers(self) -> int:
+        """K — number of servers (rows of ``capacities``)."""
         return self.capacities.shape[0]
 
     @property
     def num_resources(self) -> int:
+        """R — number of resource types (columns of ``demands``)."""
         return self.demands.shape[1]
 
     def restrict_users(self, mask: Array) -> "AllocationProblem":
@@ -81,15 +84,18 @@ class Allocation:
     x: Array                # (N, K) tasks of user n on server i
 
     @property
-    def tasks_per_user(self) -> Array:       # x_n = sum_i x[n, i]
+    def tasks_per_user(self) -> Array:
+        """x_n = sum_i x[n, i] — total tasks each user runs clusterwide."""
         return self.x.sum(axis=1)
 
     @property
-    def usage(self) -> Array:                # (K, R) consumed resources
-        # usage[i, r] = sum_n x[n, i] d[n, r]
+    def usage(self) -> Array:
+        """(K, R) consumed resources: usage[i, r] = sum_n x[n, i] d[n, r]."""
         return np.einsum("nk,nr->kr", self.x, self.problem.demands)
 
-    def utilization(self) -> Array:          # (K, R) in [0, 1]; NaN-free
+    def utilization(self) -> Array:
+        """(K, R) usage / capacity in [0, 1]; zero-capacity cells map to 0
+        instead of NaN."""
         cap = self.problem.capacities
         with np.errstate(divide="ignore", invalid="ignore"):
             u = np.where(cap > 0, self.usage / np.maximum(cap, 1e-300), 0.0)

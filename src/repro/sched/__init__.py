@@ -1,3 +1,6 @@
+"""Scheduling layers on top of the core mechanisms: TPU-pod batch
+scheduling (``cluster``), serving-time dispatch (``serving``), and the
+arrival/departure/degrade churn simulator (``churn``)."""
 from .churn import (ChurnEvent, ChurnRecord, ChurnSimulator,
                     poisson_churn_events)
 from .cluster import (Cluster, TenantJob, TPUPod, job_from_artifact,

@@ -59,6 +59,11 @@ class ChurnRecord:
     solve_ms: float
     min_vds: float           # global min normalized VDS over servers (Eq. 16)
     bottleneck_server: int   # server attaining it
+    # lexmm router observability (zeros unless the tick flow-routed):
+    lp_calls: int = 0        # LP certificates this tick
+    warm_hits: int = 0       # traced stages reused via verification
+    warm_fallbacks: int = 0  # loud flag: the event delta forced a full solve
+    router_mode: str = ""    # "verify" / "incremental" / "fallback" / "warm"
 
 
 #: sweep-based mechanisms the simulator can maintain a fixed point for
@@ -134,6 +139,11 @@ class ChurnSimulator:
         self._weights = jnp.asarray(problem.weights, jnp.float32)
         self._elig = jnp.asarray(problem.eligibility, jnp.float32)
         self._resolve = _resolve_fn()
+        # persistent lexmm router (global-share + placement="lexmm" ticks):
+        # built lazily on the BASE capacities; degrade/restore re-scale its
+        # rhs in place, arrivals/departures flow in as activity deltas
+        self._lexmm_router = None
+        self._router_stats = None
 
     # -- event application --------------------------------------------------
     def _apply(self, ev: ChurnEvent) -> None:
@@ -165,26 +175,45 @@ class ChurnSimulator:
     def _solve_lexmm_host(self) -> tuple[np.ndarray, int, float]:
         """Exact flow-routed re-solve for the global-share mechanisms: the
         lexmm certificates are host-side LP solves (no XLA mirror), so the
-        tick recomputes the level-rate matrix on the effective capacities,
-        masks departed users out of the eligibility graph and runs
-        ``flowrouter.lexmm_route`` from scratch (it is one-shot exact)."""
+        tick hands the event delta to a persistent ``RouterState`` instead
+        of re-solving from scratch — departures re-verify the cached stage
+        trace and re-solve only the unfrozen suffix, unchanged ticks verify
+        every stage with one LP each, and arrivals or capacity changes
+        trigger a (matrix-warm) full solve flagged via
+        ``ChurnRecord.warm_fallbacks``. Every path is re-proven against the
+        current network, so the allocation matches a from-scratch solve to
+        LP round-off."""
         from repro.core.baselines import level_rate_matrix
-        from repro.core.flowrouter import lexmm_route
+        from repro.core.flowrouter import RouterState
 
-        prob_eff = self._effective_problem()
-        lg = level_rate_matrix(prob_eff, self.mechanism)
-        lg = np.where(self.active[:, None], lg, 0.0)
-        x, stages = lexmm_route(prob_eff, lg)
-        return x, stages, 0.0
+        lg = level_rate_matrix(self._effective_problem(), self.mechanism)
+        router = self._lexmm_router
+        if router is not None:
+            try:
+                router.update(level_gamma=lg, capacity_scale=self.cap_scale)
+            except ValueError:       # eligibility support changed: rebuild
+                router = None
+        if router is None:
+            # build on the BASE capacities so degrade/restore compose as
+            # pure rhs re-scales against a fixed normalization
+            base_lg = level_rate_matrix(self.problem, self.mechanism)
+            router = RouterState(self.problem, base_lg)
+            router.update(level_gamma=lg, capacity_scale=self.cap_scale)
+            self._lexmm_router = router
+        x, stats = router.resolve(active=self.active)
+        self._router_stats = stats
+        return x, stats.stages, 0.0
 
     def step(self, events: Sequence[ChurnEvent], time_now: float
              ) -> ChurnRecord:
         """Apply simultaneous events, re-solve, record telemetry."""
         for ev in events:
             self._apply(ev)
+        self._router_stats = None
         t0 = _time.perf_counter()
         x, rounds, resid = self._solve(self.x if self.warm_start else None)
         solve_ms = (_time.perf_counter() - t0) * 1e3
+        rs = self._router_stats          # lexmm ticks only, else None
         cold_rounds = -1
         if self.compare_cold and self.warm_start:
             _, cold_rounds, _ = self._solve(None)
@@ -195,7 +224,11 @@ class ChurnSimulator:
             cold_rounds=cold_rounds, residual=resid,
             active_users=int(self.active.sum()),
             total_tasks=float(self.x.sum()), solve_ms=solve_ms,
-            min_vds=float(mn), bottleneck_server=int(arg))
+            min_vds=float(mn), bottleneck_server=int(arg),
+            lp_calls=0 if rs is None else rs.lp_calls,
+            warm_hits=0 if rs is None else rs.warm_hits,
+            warm_fallbacks=0 if rs is None else rs.warm_fallbacks,
+            router_mode="" if rs is None else rs.mode)
 
     def run(self, events: Sequence[ChurnEvent]) -> List[ChurnRecord]:
         """Consume a whole stream: batch same-timestamp events, one re-solve
@@ -227,6 +260,7 @@ class ChurnSimulator:
             self.problem.weights, self.problem.eligibility)
 
     def allocation(self) -> Allocation:
+        """Current allocation against the degrade-scaled capacities."""
         return Allocation(self._effective_problem(), self.x.copy())
 
 

@@ -28,6 +28,9 @@ RESOURCES = ("chips", "hbm_gb", "host_gb", "ici_gbps", "dcn_gbps")
 
 @dataclasses.dataclass
 class TPUPod:
+    """One accelerator pod — a heterogeneous PS-DSF "server" whose
+    capacity vector spans chips/HBM/host/ICI/DCN (``RESOURCES``)."""
+
     name: str
     generation: str              # "v5e" | "v5p" | ...
     chips: int
@@ -39,6 +42,8 @@ class TPUPod:
     capacity_scale: float = 1.0  # straggler mitigation degrades this
 
     def capacity(self) -> np.ndarray:
+        """Capacity vector over ``RESOURCES`` (zeros when unhealthy,
+        scaled by ``capacity_scale`` when degraded)."""
         if not self.healthy:
             return np.zeros(len(RESOURCES))
         return self.capacity_scale * np.array([
@@ -48,6 +53,9 @@ class TPUPod:
 
 @dataclasses.dataclass
 class TenantJob:
+    """One tenant's training job: per-replica demand vector plus
+    placement constraints (generation allow-list, HBM floor, DCN)."""
+
     name: str
     weight: float
     # per-replica demand vector
@@ -62,10 +70,12 @@ class TenantJob:
     needs_dcn: bool = False
 
     def demand(self) -> np.ndarray:
+        """Per-replica demand vector over ``RESOURCES``."""
         return np.array([self.chips, self.hbm_gb, self.host_gb,
                          self.ici_gbps, self.dcn_gbps])
 
     def eligible(self, pod: TPUPod) -> bool:
+        """Whether this job's placement constraints admit ``pod``."""
         if self.generations and pod.generation not in self.generations:
             return False
         if pod.hbm_gb_per_chip < self.min_hbm_per_chip:
@@ -96,10 +106,14 @@ def job_from_artifact(name: str, artifact_path: str, weight: float = 1.0,
 
 
 class Cluster:
+    """A fleet of :class:`TPUPod` with failure/degrade mutation and a
+    bridge to the core :class:`AllocationProblem` form."""
+
     def __init__(self, pods: List[TPUPod]):
         self.pods = pods
 
     def mark_failed(self, name: str) -> bool:
+        """Mark pod ``name`` unhealthy; False if unknown/already failed."""
         for p in self.pods:
             if p.name == name and p.healthy:
                 p.healthy = False
@@ -107,6 +121,8 @@ class Cluster:
         return False
 
     def degrade(self, name: str, scale: float) -> bool:
+        """Lower pod ``name``'s capacity scale to ``scale`` (stragglers);
+        False if unknown or already at/below that scale."""
         for p in self.pods:
             if p.name == name and p.capacity_scale > scale:
                 p.capacity_scale = scale
@@ -114,6 +130,8 @@ class Cluster:
         return False
 
     def problem(self, jobs: Sequence[TenantJob]) -> AllocationProblem:
+        """Assemble the PS-DSF :class:`AllocationProblem` for ``jobs`` on
+        this cluster's current (health/degrade-adjusted) capacities."""
         demands = np.stack([j.demand() for j in jobs])
         caps = np.stack([p.capacity() for p in self.pods])
         # Eligibility fully vectorized over jobs x pods (no per-job Python

@@ -24,6 +24,9 @@ SERVE_RESOURCES = ("decode_slots", "kv_gb", "prefill_tps")
 
 @dataclasses.dataclass
 class ReplicaGroup:
+    """A pool of identical model replicas — the serving-layer "server",
+    with capacity over ``SERVE_RESOURCES``."""
+
     name: str
     decode_slots: float          # concurrent sequences
     kv_gb: float                 # HBM available for KV cache
@@ -31,11 +34,15 @@ class ReplicaGroup:
     max_context: int
 
     def capacity(self) -> np.ndarray:
+        """Capacity vector over ``SERVE_RESOURCES``."""
         return np.array([self.decode_slots, self.kv_gb, self.prefill_tps])
 
 
 @dataclasses.dataclass
 class Tenant:
+    """One serving tenant; a "task" is one concurrent in-flight request
+    with its KV and prefill footprint."""
+
     name: str
     weight: float
     context_len: int
@@ -43,16 +50,19 @@ class Tenant:
     prefill_tokens_per_req: float
 
     def demand(self) -> np.ndarray:
-        # one "task" = one concurrent in-flight request
+        """Per-request demand vector over ``SERVE_RESOURCES``."""
         return np.array([1.0, self.kv_gb_per_req,
                          self.prefill_tokens_per_req])
 
     def eligible(self, g: ReplicaGroup) -> bool:
+        """Whether group ``g``'s context window fits this tenant."""
         return g.max_context >= self.context_len
 
 
 def dispatch_problem(groups: Sequence[ReplicaGroup],
                      tenants: Sequence[Tenant]) -> AllocationProblem:
+    """Assemble the PS-DSF :class:`AllocationProblem` for request dispatch
+    across replica groups (eligibility = context-window fit)."""
     return AllocationProblem(
         demands=np.stack([t.demand() for t in tenants]),
         capacities=np.stack([g.capacity() for g in groups]),
@@ -111,16 +121,33 @@ class DynamicDispatcher:
                                     placement=placement)
 
     def set_active(self, tenant_name: str, active: bool):
+        """Tenant arrival/departure by name (delegates to the simulator)."""
         idx = [t.name for t in self.tenants].index(tenant_name)
         self.sim.set_active(idx, active)
 
     def tick(self, groups=None):
+        """One asynchronous PS-DSF round over ``groups`` (all by default)."""
         self.sim.tick(groups)
 
     def quotas(self) -> Dict[str, Dict[str, float]]:
+        """Current concurrency quotas as {tenant: {group: requests}}."""
         return {t.name: {g.name: float(self.sim.x[ti, gi])
                          for gi, g in enumerate(self.groups)}
                 for ti, t in enumerate(self.tenants)}
 
+    def routed_quotas(self, mechanism: str = "tsf"
+                      ) -> Dict[str, Dict[str, float]]:
+        """Exact flow-routed quotas of a global-share comparator under the
+        current tenant activity — the serving-layer face of
+        ``DistributedPSDSF.routed_allocation``: one persistent warm router
+        per dispatcher, ``set_active`` churn arrives as an activity delta
+        (cached-stage verification / incremental suffix re-solve instead of
+        a from-scratch LP sequence; ``self.sim.router_stats`` tells which)."""
+        alloc = self.sim.routed_allocation(mechanism)
+        return {t.name: {g.name: float(alloc.x[ti, gi])
+                         for gi, g in enumerate(self.groups)}
+                for ti, t in enumerate(self.tenants)}
+
     def utilization(self) -> np.ndarray:
+        """(groups, resources) utilization of the current quotas."""
         return self.sim.utilization()

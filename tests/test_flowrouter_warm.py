@@ -1,0 +1,239 @@
+"""Warm-started lexmm router: parity with the cold reference, trace
+verification, incremental churn re-solves and the edge cases ISSUE 6 names
+(R=1 max-flow specialization, zero-rate users, a departure that unfreezes a
+middle stage)."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import level_rate_matrix
+from repro.core.flowrouter import RouterState, lexmm_route, lexmm_route_cold
+from repro.core.instances import cell_cluster_instance, dense_random_instance
+from repro.core.types import AllocationProblem
+
+PARITY_ATOL = 1e-6     # the acceptance gate; measured ~1e-12
+
+
+def totals_diff(xa, xb):
+    return float(np.abs(xa.sum(axis=1) - xb.sum(axis=1)).max())
+
+
+def masked(lg, active):
+    return np.where(active[:, None], lg, 0.0)
+
+
+@pytest.fixture(scope="module")
+def cell():
+    prob, _, _ = cell_cluster_instance(num_users=48, num_servers=8, cells=4,
+                                       seed=0)
+    return prob
+
+
+class TestWarmColdParity:
+    """The warm router must reproduce the cold reference exactly."""
+
+    @pytest.mark.parametrize("mechanism", ["tsf", "cdrfh"])
+    def test_dense_totals_and_stages(self, mechanism):
+        prob = dense_random_instance()
+        lg = level_rate_matrix(prob, mechanism)
+        xc, sc = lexmm_route_cold(prob, lg)
+        router = RouterState(prob, lg)
+        xw, stats = router.solve()
+        assert stats.stages == sc
+        assert totals_diff(xw, xc) < PARITY_ATOL
+        assert stats.lp_calls >= 2 and stats.lp_iters > 0
+        assert len(stats.stage_ms) == stats.stages
+
+    @pytest.mark.parametrize("mechanism", ["tsf", "cdrfh"])
+    def test_cell_multi_stage(self, cell, mechanism):
+        lg = level_rate_matrix(cell, mechanism)
+        xc, sc = lexmm_route_cold(cell, lg)
+        xw, sw = lexmm_route(cell, lg)
+        assert sw == sc
+        assert totals_diff(xw, xc) < PARITY_ATOL
+
+    def test_public_linprog_fallback(self):
+        """Forcing the private-wrapper handle off must not change anything
+        but the backend tag (the algorithm is backend-agnostic)."""
+        prob = dense_random_instance(num_users=20, num_servers=5)
+        lg = level_rate_matrix(prob, "tsf")
+        direct = RouterState(prob, lg)
+        xd, sd = direct.solve()
+        public = RouterState(prob, lg)
+        public._direct = None
+        xp, sp = public.solve()
+        assert sp.backend == "linprog"
+        assert sp.stages == sd.stages
+        assert totals_diff(xp, xd) < PARITY_ATOL
+        xv, sv = public.resolve()
+        assert sv.mode == "verify" and sv.warm_hits == sp.stages
+        assert totals_diff(xv, xd) < PARITY_ATOL
+
+
+class TestVerifyResolve:
+    """resolve() on unchanged state re-proves the trace, one LP per stage."""
+
+    def test_verify_is_full_certificate(self, cell):
+        lg = level_rate_matrix(cell, "tsf")
+        router = RouterState(cell, lg)
+        x0, s0 = router.solve()
+        x1, s1 = router.resolve()
+        assert s1.mode == "verify"
+        assert s1.warm_hits == s0.stages == s1.stages
+        assert s1.lp_calls == s0.stages        # exactly one LP per stage
+        assert s1.warm_fallbacks == 0
+        assert totals_diff(x1, x0) < PARITY_ATOL
+
+    def test_update_capacity_invalidates_loudly(self, cell):
+        lg = level_rate_matrix(cell, "tsf")
+        router = RouterState(cell, lg)
+        router.solve()
+        scale = np.ones(cell.num_servers)
+        scale[0] = 0.5
+        prob_eff = AllocationProblem(
+            demands=cell.demands, capacities=cell.capacities * scale[:, None],
+            weights=cell.weights, eligibility=cell.eligibility)
+        lg_eff = level_rate_matrix(prob_eff, "tsf")
+        kept = router.update(level_gamma=lg_eff, capacity_scale=scale)
+        assert not kept
+        x, stats = router.resolve()
+        assert stats.mode == "fallback" and stats.warm_fallbacks == 1
+        xc, _ = lexmm_route_cold(prob_eff, lg_eff)
+        assert totals_diff(x, xc) < PARITY_ATOL
+
+    def test_update_noop_keeps_trace(self, cell):
+        lg = level_rate_matrix(cell, "tsf")
+        router = RouterState(cell, lg)
+        router.solve()
+        assert router.update(level_gamma=lg,
+                             capacity_scale=np.ones(cell.num_servers))
+        _, stats = router.resolve()
+        assert stats.mode == "verify"
+
+
+class TestChurnDeltas:
+    """Arrival/departure deltas against the cold masked re-solve."""
+
+    def test_departure_unfreezes_middle_stage(self, cell):
+        """Departing a user frozen at stage 2 must keep stage 1 as a warm
+        hit and re-solve only the suffix — matching a cold solve on the
+        masked instance."""
+        lg = level_rate_matrix(cell, "tsf")
+        router = RouterState(cell, lg)
+        _, s0 = router.solve()
+        assert s0.stages >= 3, "fixture must be multi-stage"
+        departed = router.users[router._trace[1].frozen[0]]
+        active = np.ones(cell.num_users, dtype=bool)
+        active[departed] = False
+        x, stats = router.resolve(active=active)
+        assert stats.mode == "incremental"
+        assert stats.warm_hits >= 1          # stage 1 verified, not re-solved
+        assert stats.warm_fallbacks == 0
+        xc, _ = lexmm_route_cold(cell, masked(lg, active))
+        assert totals_diff(x, xc) < PARITY_ATOL
+
+    def test_departure_of_last_stage_verifies_prefix(self, cell):
+        lg = level_rate_matrix(cell, "tsf")
+        router = RouterState(cell, lg)
+        _, s0 = router.solve()
+        departed = router.users[router._trace[-1].frozen[0]]
+        active = np.ones(cell.num_users, dtype=bool)
+        active[departed] = False
+        x, stats = router.resolve(active=active)
+        assert stats.mode == "incremental"
+        assert stats.warm_hits >= s0.stages - 1
+        xc, _ = lexmm_route_cold(cell, masked(lg, active))
+        assert totals_diff(x, xc) < PARITY_ATOL
+
+    def test_arrival_falls_back_loudly(self, cell):
+        lg = level_rate_matrix(cell, "tsf")
+        active = np.ones(cell.num_users, dtype=bool)
+        active[3] = False
+        router = RouterState(cell, lg)
+        router.solve(active=active)
+        x, stats = router.resolve()          # None mask == everyone active
+        assert stats.mode == "fallback" and stats.warm_fallbacks == 1
+        xc, _ = lexmm_route_cold(cell, lg)
+        assert totals_diff(x, xc) < PARITY_ATOL
+
+
+class TestEdgeCases:
+    def test_single_resource_is_max_flow(self):
+        """R=1: the certificate network IS plain max-flow; two equal users
+        on one saturated server split it evenly, a third user with its own
+        server water-fills independently."""
+        prob = AllocationProblem(
+            demands=np.array([[2.0], [2.0], [1.0]]),
+            capacities=np.array([[10.0], [8.0]]),
+            weights=np.ones(3),
+            eligibility=np.array([[1.0, 0.0], [1.0, 0.0], [0.0, 1.0]]))
+        lg = level_rate_matrix(prob, "tsf")
+        router = RouterState(prob, lg)
+        x, stats = router.solve()
+        xc, sc = lexmm_route_cold(prob, lg)
+        assert stats.stages == sc
+        assert totals_diff(x, xc) < PARITY_ATOL
+        np.testing.assert_allclose(x.sum(axis=1), [2.5, 2.5, 8.0], atol=1e-9)
+
+    def test_zero_rate_users_excluded(self):
+        """A user eligible nowhere has level rate 0 everywhere: it must be
+        routed zero tasks without poisoning the normalization, on both the
+        warm and cold paths."""
+        prob = AllocationProblem(
+            demands=np.array([[1.0, 0.0], [0.0, 1.0], [1.0, 1.0]]),
+            capacities=np.array([[6.0, 6.0]]),
+            weights=np.ones(3),
+            eligibility=np.array([[1.0], [0.0], [1.0]]))
+        lg = level_rate_matrix(prob, "tsf")
+        assert (lg[1] == 0).all()
+        router = RouterState(prob, lg)
+        x, stats = router.solve()
+        xc, _ = lexmm_route_cold(prob, lg)
+        assert totals_diff(x, xc) < PARITY_ATOL
+        assert x[1].sum() == 0.0
+        xv, sv = router.resolve()
+        assert sv.mode == "verify"
+        assert totals_diff(xv, xc) < PARITY_ATOL
+
+    def test_all_zero_rate_returns_zeros(self):
+        prob = AllocationProblem(
+            demands=np.array([[1.0, 1.0]]), capacities=np.array([[4.0, 4.0]]),
+            weights=np.ones(1), eligibility=np.array([[0.0]]))
+        lg = level_rate_matrix(prob, "tsf")
+        router = RouterState(prob, lg)
+        x, stats = router.solve()
+        assert stats.stages == 0 and not x.any()
+        x2, stats2 = router.resolve()
+        assert not x2.any()
+
+
+class TestChurnStreamParity:
+    """Seeded 200-event stream: every sampled incremental tick must match a
+    from-scratch cold solve to 1e-6 (the acceptance-criteria stream)."""
+
+    @pytest.mark.parametrize("mechanism", ["tsf"])
+    def test_200_event_stream(self, mechanism):
+        from repro.sched.churn import ChurnSimulator, poisson_churn_events
+
+        prob, _, _ = cell_cluster_instance(num_users=16, num_servers=4,
+                                           cells=2, seed=3)
+        events = poisson_churn_events(prob.num_users, prob.num_servers,
+                                      horizon=200, arrival_rate=0.8,
+                                      departure_rate=0.8, seed=7)[:200]
+        assert len(events) == 200
+        sim = ChurnSimulator(prob, mechanism=mechanism, placement="lexmm",
+                             telemetry=False)
+        by_time = {}
+        for ev in events:
+            by_time.setdefault(ev.time, []).append(ev)
+        modes = set()
+        for i, (t, batch) in enumerate(sorted(by_time.items())):
+            rec = sim.step(batch, t)
+            modes.add(rec.router_mode)
+            if i % 4 == 0 or i == len(by_time) - 1:
+                prob_eff = sim._effective_problem()
+                lg = level_rate_matrix(prob_eff, mechanism)
+                xc, _ = lexmm_route_cold(prob_eff, masked(lg, sim.active))
+                assert totals_diff(sim.x, xc) < PARITY_ATOL, \
+                    f"tick {i} (t={t}) diverged from the cold solve"
+        # the stream must actually exercise the incremental machinery
+        assert "incremental" in modes or "verify" in modes

@@ -56,6 +56,14 @@ def _load_bench(name):
     return mod
 
 
+def _warm_rows():
+    """A passing set of the four gated ``lexmmwarm_*`` benchmark rows."""
+    return [{"name": f"lexmmwarm_{inst}_{mech}", "us_per_call": 1,
+             "derived": ("cold_us=10 speedup=5.00x maxdiff=1.0e-12 "
+                         "stages=1 mode=verify lp_calls=1 lp_iters=10")}
+            for inst in ("dense", "cell") for mech in ("tsf", "cdrfh")]
+
+
 def levels_of(prob, mechanism, x_totals):
     w = np.maximum(level_rate_matrix(prob, mechanism).max(axis=1), 1e-300)
     return x_totals / (prob.weights * w)
@@ -507,11 +515,39 @@ class TestNaNSerialization:
         rows.append({"name": "placement_extra_row", "us_per_call": 1,
                      "derived": "stranded=null"})
         strand["placement_extra_row"] = None
+        rows.extend(_warm_rows())
         smoke = tmp_path / "smoke.json"
         base = tmp_path / "base.json"
         smoke.write_text(json.dumps(rows))
         base.write_text(json.dumps({"stranded": strand}))
         assert cp.main([str(smoke), str(base)]) == 0
+
+    def test_gate_requires_warm_rows_and_bounds(self, tmp_path, capsys):
+        """The warm-router rows are part of the gate: a missing row, a
+        sub-2x speedup, or a parity gap above 1e-6 must each fail it
+        (speed and exactness are gated together, never traded)."""
+        cp = _load_bench("check_placement")
+        smoke = tmp_path / "smoke.json"
+        base = tmp_path / "base.json"
+        base.write_text(json.dumps({"stranded": {}}))
+
+        def run(warm_rows):
+            smoke.write_text(json.dumps(warm_rows))
+            code = cp.main([str(smoke), str(base)])
+            return code, capsys.readouterr().out
+
+        code, out = run(_warm_rows()[1:])            # one row dropped
+        assert code == 1 and "missing warm-router row" in out
+        slow = _warm_rows()
+        slow[0]["derived"] = slow[0]["derived"].replace("speedup=5.00x",
+                                                        "speedup=1.30x")
+        code, out = run(slow)
+        assert code == 1 and "only 1.30x" in out
+        off = _warm_rows()
+        off[0]["derived"] = off[0]["derived"].replace("maxdiff=1.0e-12",
+                                                      "maxdiff=3.0e-4")
+        code, out = run(off)
+        assert code == 1 and "differ by 3.00e-04" in out
 
     def test_gate_requires_headline_pairs_even_if_baseline_dropped(
             self, tmp_path, capsys):
