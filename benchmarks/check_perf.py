@@ -1,0 +1,131 @@
+"""CI gate for the perf trajectory (ISSUE-7's satellite to the fill work).
+
+Reads a ``benchmarks/run.py --json``/``--out`` artifact and fails when:
+
+  * a row shared with the committed ``benchmarks/perf_baseline.json``
+    regressed by more than ``MAX_RATIO`` (1.5x) in us-per-call. Rows are
+    compared on ``max(us, NOISE_FLOOR_US)`` so sub-floor timings (e.g. the
+    17us psdsf/lexmm identity row) can jitter by any factor without
+    tripping the gate — below the floor the clock, not the code, dominates;
+  * a baseline row is missing from the artifact (a silently skipped
+    benchmark must not pass the gate; rows new to the artifact are
+    reported but never gated, so adding a benchmark needs no lockstep
+    baseline edit);
+  * the ``fill_comparison`` self-certification fails: the jitted bisect
+    engine's ``fillcmp_dense_bisect_gauss`` row must show at least
+    ``FILL_MIN_SPEEDUP`` (3x) over the event engine AND an event-parity
+    ``maxdiff`` within ``FILL_PARITY_ATOL`` (1e-9) — the ISSUE-7
+    acceptance: the sort-free engine must be fast AND bit-faithful, never
+    one at the other's expense. The numpy bisect parity row is gated on
+    ``maxdiff`` only (it is the fixed-step reference the Pallas kernel
+    mirrors, not a speed contender).
+
+A delta table (baseline us, measured us, ratio, verdict) is always
+printed, gate outcome aside, so the perf trajectory is legible from the
+CI log alone.
+
+Baseline numbers are machine-relative: regenerate them intentionally on
+the reference machine (re-run the benchmark, commit the new numbers) —
+never loosen ``MAX_RATIO`` to absorb a real regression.
+
+Usage: python benchmarks/check_perf.py [BENCH_JSON] [BASELINE_JSON]
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+import sys
+from pathlib import Path
+
+#: maximum tolerated per-row slowdown vs the committed baseline
+MAX_RATIO = 1.5
+
+#: rows are compared on max(us, floor): below this the scheduler/clock
+#: noise on a 2-core CI box exceeds the signal
+NOISE_FLOOR_US = 2000.0
+
+#: fill_comparison acceptance (the ISSUE-7 headline)
+FILL_SPEED_ROW = "fillcmp_dense_bisect_gauss"
+FILL_MIN_SPEEDUP = 3.0
+FILL_PARITY_ATOL = 1e-9
+FILL_PARITY_ROWS = (FILL_SPEED_ROW, "fillcmp_dense_numpy_bisect")
+
+
+def _parse(derived: str, field: str) -> float | None:
+    m = re.search(rf"{field}=([-\d.eE+]+)x?", derived)
+    return float(m.group(1)) if m else None
+
+
+def main(argv=None) -> int:
+    args = list(argv if argv is not None else sys.argv[1:])
+    bench = Path(args[0] if args else "artifacts/BENCH_smoke.json")
+    base = Path(args[1] if len(args) > 1
+                else Path(__file__).parent / "perf_baseline.json")
+    rows = json.loads(bench.read_text())
+    got_us = {r["name"]: float(r["us_per_call"]) for r in rows}
+    derived = {r["name"]: r.get("derived", "") for r in rows}
+    want_us = json.loads(base.read_text())["us_per_call"]
+
+    failures: list[str] = []
+    print(f"{'row':44s} {'base_us':>10s} {'got_us':>10s} {'ratio':>7s}")
+    for name, baseline in want_us.items():
+        if name not in got_us:
+            failures.append(f"missing row {name} (benchmark skipped?)")
+            print(f"{name:44s} {baseline:10.0f} {'---':>10s} {'---':>7s}"
+                  f"  MISSING")
+            continue
+        got = got_us[name]
+        ratio = max(got, NOISE_FLOOR_US) / max(baseline, NOISE_FLOOR_US)
+        verdict = "ok"
+        if ratio > MAX_RATIO:
+            verdict = "REGRESSED"
+            failures.append(
+                f"{name}: {got:.0f}us vs baseline {baseline:.0f}us "
+                f"({ratio:.2f}x > {MAX_RATIO}x; floor {NOISE_FLOOR_US:.0f})")
+        print(f"{name:44s} {baseline:10.0f} {got:10.0f} {ratio:7.2f}"
+              f"  {verdict}")
+    for name in sorted(set(got_us) - set(want_us)):
+        print(f"{name:44s} {'---':>10s} {got_us[name]:10.0f} {'---':>7s}"
+              f"  new (ungated)")
+
+    # --- fill-engine self-certification (speed AND parity) ---------------
+    d = derived.get(FILL_SPEED_ROW)
+    if d is None:
+        failures.append(f"missing fill-comparison row {FILL_SPEED_ROW}")
+    else:
+        speedup = _parse(d, "speedup")
+        if speedup is None:
+            failures.append(f"{FILL_SPEED_ROW}: derived lacks speedup= "
+                            f"({d!r})")
+        elif speedup < FILL_MIN_SPEEDUP:
+            failures.append(
+                f"{FILL_SPEED_ROW}: bisect only {speedup:.2f}x over the "
+                f"event engine (gate: >= {FILL_MIN_SPEEDUP}x)")
+    for name in FILL_PARITY_ROWS:
+        d = derived.get(name)
+        if d is None:
+            failures.append(f"missing fill-parity row {name}")
+            continue
+        maxdiff = _parse(d, "maxdiff")
+        if maxdiff is None:
+            failures.append(f"{name}: derived lacks maxdiff= ({d!r})")
+        elif not math.isfinite(maxdiff) or maxdiff > FILL_PARITY_ATOL:
+            failures.append(
+                f"{name}: bisect/event fixed points differ by "
+                f"{maxdiff:.2e} (gate: <= {FILL_PARITY_ATOL})")
+
+    if failures:
+        print("perf gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"perf gate OK: {len(want_us)} rows within {MAX_RATIO}x of "
+          f"baseline (noise floor {NOISE_FLOOR_US:.0f}us); bisect fill "
+          f">= {FILL_MIN_SPEEDUP}x and event-exact to {FILL_PARITY_ATOL} "
+          f"on {len(FILL_PARITY_ROWS)} rows")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

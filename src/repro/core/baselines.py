@@ -104,6 +104,7 @@ def solve_level_fill(
     scale: Optional[float] = None,
     placement: str = "level",
     server_order: str = "fixed",
+    fill: str = "event",
 ) -> tuple[Allocation, SolveInfo]:
     """Exact weighted max-min level fill with placement.
 
@@ -126,7 +127,7 @@ def solve_level_fill(
         problem, level_gamma, placement=placement, mode="rdm",
         per_server_rates=False, scale=scale, x0=x0, max_rounds=max_rounds,
         tol=tol, loose_tol=loose_tol, adaptive_damping=adaptive_damping,
-        server_order=server_order)
+        server_order=server_order, fill=fill)
 
 
 def _solve_baseline(problem: AllocationProblem, mechanism: str,

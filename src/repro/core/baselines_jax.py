@@ -154,20 +154,25 @@ def _reject_lexmm_traced(placement: str) -> None:
             "flowrouter.lexmm_route) or the numpy engine")
 
 
-@functools.partial(jax.jit, static_argnames=("max_rounds", "placement"))
+@functools.partial(jax.jit, static_argnames=("max_rounds", "placement",
+                                             "fill", "round"))
 def baseline_solve_jax(demands, capacities, weights, level_gamma, *, x0=None,
                        max_rounds: int = 256, tol: float = 1e-6,
-                       placement: str = "level"):
+                       placement: str = "level", fill: str = "event",
+                       round: str = "gauss"):
     """Solve one exact baseline fill. Returns (x (N,K), rounds, residual).
 
     ``level_gamma`` is the (N, K) level-rate matrix from
     ``level_rate_matrix`` / ``level_rate_matrix_jnp``. Warm-startable via
-    ``x0`` exactly like ``psdsf_solve_jax``. ``placement="headroom"`` runs
+    ``x0`` exactly like ``psdsf_solve_jax``; ``fill``/``round`` select the
+    per-server fill engine and outer iteration exactly like the PS-DSF
+    entry points (the solver body is shared). ``placement="headroom"`` runs
     the routed global fill instead of the per-server sweep (one-shot exact;
-    ``x0`` and the sweep knobs are ignored); ``"bestfit"`` is numpy-only;
-    ``"lexmm"``'s flow certificates are LP solves with data-dependent
-    pivoting — there is nothing to trace, so this jitted entry point
-    rejects it (``solve_baseline_jax`` routes it host-side instead).
+    ``x0``, the sweep knobs and the fill engine are ignored); ``"bestfit"``
+    is numpy-only; ``"lexmm"``'s flow certificates are LP solves with
+    data-dependent pivoting — there is nothing to trace, so this jitted
+    entry point rejects it (``solve_baseline_jax`` routes it host-side
+    instead).
     """
     _check_placement(placement)
     _reject_lexmm_traced(placement)
@@ -179,21 +184,24 @@ def baseline_solve_jax(demands, capacities, weights, level_gamma, *, x0=None,
         x0 = jnp.zeros((n, k), dtype=dtype)
     return _solve_core(demands, capacities, weights, level_gamma,
                        x0.astype(dtype), "rdm", max_rounds, tol,
-                       scale=_gamma_scale(demands, capacities, level_gamma))
+                       scale=_gamma_scale(demands, capacities, level_gamma),
+                       fill=fill, round_mode=round)
 
 
-@functools.partial(jax.jit, static_argnames=("max_rounds", "placement"))
+@functools.partial(jax.jit, static_argnames=("max_rounds", "placement",
+                                             "fill", "round"))
 def baseline_solve_batched(demands, capacities, weights, level_gamma, *,
                            x0=None, max_rounds: int = 256, tol: float = 1e-6,
-                           placement: str = "level"):
+                           placement: str = "level", fill: str = "event",
+                           round: str = "gauss"):
     """Solve B independent baseline fills in one jitted vmap call.
 
     Shapes as ``psdsf_solve_batched``: demands (B, N, R), capacities
     (B, K, R), weights (B, N), level_gamma (B, N, K), optional x0 (B, N, K).
     Pad heterogeneous problems with ``psdsf_jax.batch_problems`` (padding is
     inert: padded users carry level rate 0, padded servers zero capacity).
-    ``placement`` as in ``baseline_solve_jax`` (``"lexmm"`` rejected: the
-    flow certificates solve host-side).
+    ``placement``/``fill``/``round`` as in ``baseline_solve_jax``
+    (``"lexmm"`` rejected: the flow certificates solve host-side).
     """
     _check_placement(placement)
     _reject_lexmm_traced(placement)
@@ -206,7 +214,8 @@ def baseline_solve_batched(demands, capacities, weights, level_gamma, *,
         if placement == "headroom":
             return _routed_fill_core(d, c, w, lg)
         return _solve_core(d, c, w, lg, x0_, "rdm", max_rounds, tol,
-                           scale=_gamma_scale(d, c, lg))
+                           scale=_gamma_scale(d, c, lg), fill=fill,
+                           round_mode=round)
 
     return jax.vmap(solve)(demands, capacities, weights, level_gamma,
                            x0.astype(dtype))
@@ -226,10 +235,12 @@ def batch_level_rates(problems, mechanism: str, dtype=np.float32):
 
 def solve_baseline_jax(problem: AllocationProblem, mechanism: str, x0=None,
                        max_rounds: int = 256, tol: float = 1e-6,
-                       loose_tol: float = 5e-3, placement: str = "level"
+                       loose_tol: float = 5e-3, placement: str = "level",
+                       fill: str = "event", round: str = "gauss"
                        ) -> tuple[Allocation, SolveInfo]:
     """Convenience wrapper with the same container/contract as the numpy
-    baseline solvers (``solve_tsf`` & co.).
+    baseline solvers (``solve_tsf`` & co.); ``fill``/``round`` thread to
+    the shared jitted sweep.
 
     ``placement="lexmm"`` is honored here by running the exact flow router
     host-side (``flowrouter.lexmm_route``) — an LP certificate has no XLA
@@ -237,6 +248,7 @@ def solve_baseline_jax(problem: AllocationProblem, mechanism: str, x0=None,
     jitted sweep to accelerate.
     """
     from .gamma import gamma_matrix
+    from .placement import fill_iter_budget
 
     g = gamma_matrix(problem)    # computed once: level rates AND scale
     lg = level_rate_matrix(problem, mechanism, gamma=g)
@@ -246,17 +258,26 @@ def solve_baseline_jax(problem: AllocationProblem, mechanism: str, x0=None,
         x, stages = lexmm_route(problem, lg)
         return (Allocation(problem, x),
                 SolveInfo(stages, True, 0.0, placement="lexmm",
+                          fill_engine="",
                           stranded_frac=stranded_fraction(problem, x,
                                                           gamma=g)))
     x, rounds, resid = baseline_solve_jax(
         jnp.asarray(problem.demands), jnp.asarray(problem.capacities),
         jnp.asarray(problem.weights), jnp.asarray(lg),
         x0=None if x0 is None else jnp.asarray(x0), max_rounds=max_rounds,
-        tol=tol, placement=placement)
+        tol=tol, placement=placement, fill=fill, round=round)
     x = np.asarray(x, dtype=np.float64)
+    swept = placement != "headroom"          # routed fill: no per-server fill
     return (Allocation(problem, x),
             SolveInfo.from_residual(int(rounds), float(resid),
                                     float(g.max(initial=1.0)), tol,
                                     loose_tol, placement=placement,
                                     stranded_frac=stranded_fraction(
-                                        problem, x, gamma=g)))
+                                        problem, x, gamma=g),
+                                    fill_engine=fill if swept else "",
+                                    fill_iters=(int(rounds)
+                                                * problem.num_servers
+                                                * fill_iter_budget(
+                                                    problem.num_resources,
+                                                    "rdm", fill)
+                                                if swept else 0)))

@@ -30,7 +30,8 @@ from typing import Iterable, Optional, Sequence
 import numpy as np
 
 from .gamma import gamma_matrix
-from .psdsf import server_fill_rdm, server_fill_tdm
+from .psdsf import (server_fill_rdm, server_fill_rdm_bisect, server_fill_tdm,
+                    server_fill_tdm_bisect)
 from .types import Allocation, AllocationProblem
 
 _ENGINES = ("numpy", "jax")
@@ -44,22 +45,25 @@ def _tick_jax_fn():
     import jax
     import jax.numpy as jnp
 
-    from .psdsf_jax import _fill_one_server_rdm, _fill_one_server_tdm
+    from .psdsf_jax import (_fill_one_server_rdm, _fill_one_server_rdm_bisect,
+                            _fill_one_server_tdm, _fill_one_server_tdm_bisect)
 
-    @functools.partial(jax.jit, static_argnames=("mode",))
+    @functools.partial(jax.jit, static_argnames=("mode", "fill"))
     def tick(x, demands, capacities, weights, gamma, active, servers, *,
-             mode):
+             mode, fill="event"):
         gamma = jnp.where(active[:, None], gamma, 0.0)
 
         def body(j, x):
             i = servers[j]
             x_ext = x.sum(axis=1) - x[:, i]
             if mode == "rdm":
-                xi = _fill_one_server_rdm(
-                    capacities[i], demands, weights, gamma[:, i], x_ext)
+                f = (_fill_one_server_rdm_bisect if fill == "bisect"
+                     else _fill_one_server_rdm)
+                xi = f(capacities[i], demands, weights, gamma[:, i], x_ext)
             else:
-                xi = _fill_one_server_tdm(
-                    demands, weights, gamma[:, i], x_ext)
+                f = (_fill_one_server_tdm_bisect if fill == "bisect"
+                     else _fill_one_server_tdm)
+                xi = f(demands, weights, gamma[:, i], x_ext)
             return x.at[:, i].set(xi)
 
         return jax.lax.fori_loop(0, servers.shape[0], body, x)
@@ -94,12 +98,18 @@ class DistributedPSDSF:
     totals-preserving ``placement.repack_pass`` (proportional / greedy),
     the asynchronous analogue of ``repack_refill`` (feasibility is
     preserved by construction; the next tick re-equilibrates the levels).
+
+    ``fill`` selects the per-server fill engine on both backends:
+    ``"event"`` (argsort + saturation-event scan) or ``"bisect"`` (the
+    sort-free monotone-bisection engine — identical fixed point, see
+    ``placement.server_fill_rdm_bisect``).
     """
 
     def __init__(self, problem: AllocationProblem, mode: str = "rdm",
                  seed: int = 0, engine: str = "numpy",
-                 precision: str = "highest", placement: str = "level"):
-        from .placement import get_placement
+                 precision: str = "highest", placement: str = "level",
+                 fill: str = "event"):
+        from .placement import FILL_ENGINES, get_placement
 
         if mode not in ("rdm", "tdm"):
             raise ValueError(mode)
@@ -107,10 +117,13 @@ class DistributedPSDSF:
             raise ValueError(f"engine must be one of {_ENGINES}: {engine}")
         if precision not in ("highest", "fast"):
             raise ValueError(precision)
+        if fill not in FILL_ENGINES:
+            raise ValueError(f"fill must be one of {FILL_ENGINES}: {fill}")
         get_placement(placement)               # unknown strategies fail fast
         self.problem = problem
         self.mode = mode
         self.engine = engine
+        self.fill = fill
         self.placement = placement
         self.gamma = gamma_matrix(problem)
         self.x = np.zeros((problem.num_users, problem.num_servers))
@@ -163,16 +176,17 @@ class DistributedPSDSF:
             return
         # Row sums feeding the external floors are maintained incrementally:
         # one O(NK) reduction per tick, O(N) updates per server after that.
+        bisect = self.fill == "bisect"
         xsum = self.x.sum(axis=1)
         for i in idx:
             gamma_i = np.where(self.active, self.gamma[:, i], 0.0)
             x_ext = xsum - self.x[:, i]
             if self.mode == "rdm":
-                xi = server_fill_rdm(
-                    p.capacities[i], p.demands, p.weights, gamma_i, x_ext)
+                f = server_fill_rdm_bisect if bisect else server_fill_rdm
+                xi = f(p.capacities[i], p.demands, p.weights, gamma_i, x_ext)
             else:
-                xi = server_fill_tdm(
-                    p.demands, p.weights, gamma_i, x_ext)
+                f = server_fill_tdm_bisect if bisect else server_fill_tdm
+                xi = f(p.demands, p.weights, gamma_i, x_ext)
             xsum += xi - self.x[:, i]
             self.x[:, i] = xi
         self._repack_if_routed()
@@ -195,7 +209,7 @@ class DistributedPSDSF:
                 jnp.asarray(self.x, self._demands.dtype), self._demands,
                 self._caps, self._weights, self._gamma,
                 jnp.asarray(self.active), jnp.asarray(servers),
-                mode=self.mode)
+                mode=self.mode, fill=self.fill)
             x.block_until_ready()
         self.x = np.array(x, dtype=np.float64)   # copy: keep self.x writable
 

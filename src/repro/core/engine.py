@@ -139,19 +139,34 @@ def _uniform(problem: AllocationProblem, **kw
 def _reject_placement(kw: dict, mechanism: str) -> None:
     """Closed-form mechanisms have no placement freedom: drf solves a
     pooled relaxation, uniform IS a fixed placement. Accept only the
-    default strategy so a routing request cannot be silently ignored."""
+    default strategy so a routing request cannot be silently ignored.
+    The same applies to the sweep-only ``fill``/``round`` axes — there is
+    no per-server fill to run, so only the defaults are accepted."""
     placement = kw.pop("placement", "level")
     get_placement(placement)
     if placement != "level":
         raise ValueError(
             f"mechanism {mechanism!r} is closed-form and has no placement "
             f"freedom; only placement='level' is accepted, got {placement!r}")
+    fill = kw.pop("fill", "event")
+    rnd = kw.pop("round", "gauss")
+    if fill != "event" or rnd != "gauss":
+        raise ValueError(
+            f"mechanism {mechanism!r} is closed-form and runs no per-server "
+            f"fill; only fill='event', round='gauss' are accepted, got "
+            f"fill={fill!r}, round={rnd!r}")
 
 
 def solve(problem: AllocationProblem, mechanism: str = "psdsf-rdm",
           backend: str = "numpy", placement: str = "level",
           **kw) -> Tuple[Allocation, SolveInfo]:
     """One-call entry point: registry lookup + optional jitted backend.
+
+    Sweep mechanisms additionally accept ``fill="event"|"bisect"`` (the
+    per-server fill engine — same fixed point, see
+    ``placement.server_fill_rdm_bisect``) and, on the jax backend,
+    ``round="gauss"|"jacobi"`` (the outer iteration, see
+    ``psdsf_jax._solve_core``); closed-form mechanisms reject both.
 
     ``placement`` selects the routing strategy for sweep mechanisms (see
     ``core.placement``); the jax backend accepts the strategies flagged
@@ -182,30 +197,44 @@ def solve(problem: AllocationProblem, mechanism: str = "psdsf-rdm",
         from .baselines_jax import solve_baseline_jax
         return solve_baseline_jax(problem, mechanism, placement=placement,
                                   **kw)
+    if mechanism in SWEEP_MECHANISMS:
+        rnd = kw.pop("round", "gauss")
+        if rnd != "gauss":
+            raise ValueError(
+                f"round={rnd!r} needs the vmapped sweep: use backend='jax' "
+                f"(the numpy sweep is Gauss-Seidel by construction)")
     return get_allocator(mechanism)(problem, placement=placement, **kw)
 
 
 def _solve_psdsf_via_jax(problem: AllocationProblem, mechanism: str, x0=None,
                          max_rounds: int = 256, tol: float = 1e-6,
-                         loose_tol: float = 5e-3, placement: str = "level"
+                         loose_tol: float = 5e-3, placement: str = "level",
+                         fill: str = "event", round: str = "gauss"
                          ) -> Tuple[Allocation, SolveInfo]:
     import jax.numpy as jnp
     import numpy as np
 
     from .gamma import gamma_matrix
+    from .placement import fill_iter_budget
     from .psdsf_jax import psdsf_solve_jax
 
     g = gamma_matrix(problem)
+    mode = "rdm" if mechanism == "psdsf-rdm" else "tdm"
     x, rounds, resid = psdsf_solve_jax(
         jnp.asarray(problem.demands), jnp.asarray(problem.capacities),
         jnp.asarray(problem.weights), jnp.asarray(g),
         x0=None if x0 is None else jnp.asarray(x0),
-        mode="rdm" if mechanism == "psdsf-rdm" else "tdm",
-        max_rounds=max_rounds, tol=tol, placement=placement)
+        mode=mode, max_rounds=max_rounds, tol=tol, placement=placement,
+        fill=fill, round=round)
     x = np.asarray(x, dtype=np.float64)
     return (Allocation(problem, x),
             SolveInfo.from_residual(int(rounds), float(resid),
                                     float(g.max(initial=1.0)), tol,
                                     loose_tol, placement=placement,
                                     stranded_frac=stranded_fraction(
-                                        problem, x, gamma=g)))
+                                        problem, x, gamma=g),
+                                    fill_engine=fill,
+                                    fill_iters=int(rounds) *
+                                    problem.num_servers *
+                                    fill_iter_budget(problem.num_resources,
+                                                     mode, fill)))

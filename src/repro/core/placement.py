@@ -85,6 +85,18 @@ REPACK_PASSES = 3
 #: a repack pass is kept only when it cuts the stranded fraction by this much
 REPACK_MIN_GAIN = 1e-6
 
+#: bisection steps per saturation event of the ``bisect`` fill engine —
+#: enough to shrink the level bracket by 2^-48 (~3.6e-15 relative), far
+#: below the 1e-9 parity gate against the event fill. The jitted f32 path
+#: (``precision="fast"``) uses ``BISECT_STEPS_F32`` instead: past ~26 steps
+#: the bracket width is below f32 ulp and extra steps are no-ops.
+BISECT_STEPS = 48
+BISECT_STEPS_F32 = 26
+
+#: per-server fill engines (see ``server_fill_rdm`` vs
+#: ``server_fill_rdm_bisect``); the jitted mirrors accept the same names
+FILL_ENGINES = ("event", "bisect")
+
 
 # ---------------------------------------------------------------------------
 # SolveInfo: the uniform solve contract (placement + convergence + waste)
@@ -111,12 +123,16 @@ class SolveInfo:
     solve_ms: float = 0.0    # router wall time (0 for iterative solvers)
     stage_ms: tuple = ()     # per-stage wall times, stage order
     router_mode: str = ""    # "warm" / "verify" / "incremental" / "fallback"
+    fill_engine: str = "event"  # per-server fill engine ("" if none ran)
+    fill_iters: int = 0      # inner fill iterations (events / bisect steps)
 
     @classmethod
     def from_residual(cls, rounds: int, residual: float, scale: float,
                       tol: float, loose_tol: float = 5e-3,
                       placement: str = "level",
-                      stranded_frac: float = float("nan")) -> "SolveInfo":
+                      stranded_frac: float = float("nan"),
+                      fill_engine: str = "event",
+                      fill_iters: int = 0) -> "SolveInfo":
         """The acceptance contract applied to a raw (rounds, residual) pair
         — the single place the tight/loose bands are derived, shared by the
         jitted solver wrappers so the psdsf and baseline paths cannot
@@ -125,7 +141,8 @@ class SolveInfo:
         converged = residual <= tol * scale
         approx = not converged and residual <= loose_tol * scale
         return cls(rounds, converged or approx, residual, approx=approx,
-                   placement=placement, stranded_frac=stranded_frac)
+                   placement=placement, stranded_frac=stranded_frac,
+                   fill_engine=fill_engine, fill_iters=fill_iters)
 
 
 # ---------------------------------------------------------------------------
@@ -350,6 +367,125 @@ def server_fill_tdm(
             break
     x_i[act] = phi[act] * gamma_i[act] * np.maximum(0.0, level - floor)
     return x_i
+
+
+# ---------------------------------------------------------------------------
+# Sort-free bisection fill engine (fill="bisect")
+# ---------------------------------------------------------------------------
+
+def server_fill_rdm_bisect(
+    cap: np.ndarray,          # (R,) capacities of this server
+    demands: np.ndarray,      # (N, R)
+    phi: np.ndarray,          # (N,)
+    gamma_i: np.ndarray,      # (N,) gamma w.r.t. this server
+    x_ext: np.ndarray,        # (N,) tasks user holds on OTHER servers
+    steps: int = BISECT_STEPS,
+) -> np.ndarray:
+    """Sort-free twin of :func:`server_fill_rdm` via monotone bisection.
+
+    Per-resource usage at water level L,
+    ``U_r(L) = frozen_r + sum_active d[n,r] rate_n max(0, L - f_n)``, is
+    monotone (piecewise-linear, convex) in L, so each saturation event is a
+    root-find: bracket the first crossing (lo = current level; hi = the
+    max active floor plus the tightest ``headroom / total-slope`` step, at
+    which every unsaturated demanded resource is at or past capacity) and
+    bisect ``steps`` times. No argsort, no per-breakpoint scan — each probe
+    is one dense (N,)x(N,R) contraction, which is what the jitted/Pallas
+    mirrors vectorize. A resource binds when its capacity gap at the found
+    level is within ``local_slope * _TOL`` (the same level-tolerance the
+    event engine applies to crossing candidates); binding freezes every
+    active user demanding it (Eq. 17), so the loop runs <= R+1 events and
+    the fixed point matches the event engine to bracket-width precision
+    (~1e-14 relative at 48 steps).
+    """
+    n_users, n_res = demands.shape
+    x_i = np.zeros(n_users)
+    eligible = gamma_i > 0
+    if not eligible.any():
+        return x_i
+
+    rate = np.where(eligible, phi * gamma_i, 0.0)                # dx/dL
+    with np.errstate(divide="ignore", invalid="ignore"):
+        floor = np.where(eligible, x_ext / np.maximum(rate, 1e-300), np.inf)
+
+    active = eligible.copy()
+    frozen_usage = np.zeros(n_res)
+    cap_scale = max(1.0, cap.max(initial=1.0))
+    saturated = cap <= _TOL * cap_scale                          # zero-capacity
+    level = 0.0
+
+    def usage_at(lvl, rate_a):
+        # floor is +inf off the eligible support: max(lvl - inf, 0) == 0
+        return frozen_usage + (rate_a * np.maximum(lvl - floor, 0.0)) @ demands
+
+    for _ in range(n_res + 1):
+        if not active.any():
+            break
+        rate_a = np.where(active, rate, 0.0)
+        slope_tot = rate_a @ demands                             # (R,)
+        can_bind = ~saturated & (slope_tot > _TOL)
+        if not can_bind.any():
+            # No unsaturated resource is demanded by an active user — cannot
+            # happen with finite gamma (mirrors the event engine's guard).
+            raise RuntimeError("server_fill_rdm_bisect: unbounded fill")
+        lo = max(level, 0.0)
+        hi = max(float(floor[active].max()), lo)
+        head = np.maximum(cap - usage_at(hi, rate_a), 0.0)
+        # Beyond hi every active user contributes at slope_tot, so the
+        # tightest headroom step lands at/past the first crossing: U(lo) <=
+        # cap <= U(hi) and the bracket is valid.
+        hi += float((head[can_bind] / slope_tot[can_bind]).min())
+        for _ in range(steps):
+            mid = 0.5 * (lo + hi)
+            if (usage_at(mid, rate_a) >= cap)[can_bind].any():
+                hi = mid
+            else:
+                lo = mid
+        best = max(hi, level)
+        u = usage_at(best, rate_a)
+        lslope = (rate_a * (floor <= best)) @ demands            # local dU/dL
+        bind = can_bind & (cap - u <= lslope * _TOL + 1e-12 * cap_scale)
+        level = best
+        x_i = np.where(active, rate * np.maximum(level - floor, 0.0), x_i)
+        newly_frozen = active & (demands[:, bind].sum(axis=1) > 0)
+        frozen_usage = frozen_usage + np.einsum(
+            "n,nr->r", x_i * newly_frozen, demands)
+        saturated |= bind
+        active &= ~newly_frozen
+    return x_i
+
+
+def server_fill_tdm_bisect(
+    demands: np.ndarray,      # unused except for symmetry with the rdm fill
+    phi: np.ndarray,
+    gamma_i: np.ndarray,
+    x_ext: np.ndarray,
+    steps: int = BISECT_STEPS,
+) -> np.ndarray:
+    """Sort-free twin of :func:`server_fill_tdm`: the single virtual
+    time-share resource makes the fill one scalar bisection on
+    ``usage(L) = sum_n phi_n max(0, L - f_n) = 1`` (monotone in L; bracket
+    ``[0, max_floor + 1/sum(phi)]`` always contains the root)."""
+    del demands
+    n_users = phi.shape[0]
+    x_i = np.zeros(n_users)
+    eligible = gamma_i > 0
+    if not eligible.any():
+        return x_i
+    rate = np.where(eligible, phi, 0.0)              # d(time-share)/dL
+    with np.errstate(divide="ignore", invalid="ignore"):
+        floor = np.where(eligible,
+                         x_ext / np.maximum(phi * gamma_i, 1e-300), np.inf)
+    lo = 0.0
+    hi = max(float(floor[eligible].max()), 0.0) + 1.0 / float(rate.sum())
+    for _ in range(steps):
+        mid = 0.5 * (lo + hi)
+        if float((rate * np.maximum(mid - floor, 0.0)).sum()) >= 1.0:
+            hi = mid
+        else:
+            lo = mid
+    return np.where(eligible, phi * gamma_i * np.maximum(hi - floor, 0.0),
+                    0.0)
 
 
 # ---------------------------------------------------------------------------
@@ -661,20 +797,49 @@ def repack_refill(
 # The one entry point mechanisms dispatch through
 # ---------------------------------------------------------------------------
 
+def fill_iter_budget(num_resources: int, mode: str, fill: str) -> int:
+    """Inner-iteration budget of ONE per-server fill: saturation events for
+    the event engine (<= R+1; the TDM fill is a single closed-form pass),
+    events x bisection steps for the bisect engine. ``SolveInfo.fill_iters``
+    totals this over every fill a solve ran — the observability counter the
+    ``fill_comparison`` benchmark surfaces."""
+    if fill not in FILL_ENGINES:
+        raise ValueError(f"fill must be one of {FILL_ENGINES}: {fill!r}")
+    events = 1 if mode == "tdm" else num_resources + 1
+    return events * (BISECT_STEPS if fill == "bisect" else 1)
+
+
 def make_server_fill(problem: AllocationProblem, level_gamma: np.ndarray,
-                     mode: str = "rdm") -> Callable:
-    """The per-server rebuild closure for a (mechanism, regime) pair."""
+                     mode: str = "rdm", fill: str = "event") -> Callable:
+    """The per-server rebuild closure for a (mechanism, regime) pair.
+
+    ``fill`` selects the engine: ``"event"`` (argsort + saturation-event
+    scan, the historical exact fill) or ``"bisect"`` (sort-free monotone
+    bisection — same fixed point to ~1e-14; see ``server_fill_rdm_bisect``).
+    The closure counts its invocations on ``fill.calls`` so callers can
+    report ``fill_iters`` without touching the fill signatures.
+    """
+    if fill not in FILL_ENGINES:
+        raise ValueError(f"fill must be one of {FILL_ENGINES}: {fill!r}")
+    bisect = fill == "bisect"
     if mode == "rdm":
-        def fill(i, x_ext):
-            return server_fill_rdm(problem.capacities[i], problem.demands,
-                                   problem.weights, level_gamma[:, i], x_ext)
+        rdm = server_fill_rdm_bisect if bisect else server_fill_rdm
+
+        def fill_fn(i, x_ext):
+            fill_fn.calls += 1
+            return rdm(problem.capacities[i], problem.demands,
+                       problem.weights, level_gamma[:, i], x_ext)
     elif mode == "tdm":
-        def fill(i, x_ext):
-            return server_fill_tdm(problem.demands, problem.weights,
-                                   level_gamma[:, i], x_ext)
+        tdm = server_fill_tdm_bisect if bisect else server_fill_tdm
+
+        def fill_fn(i, x_ext):
+            fill_fn.calls += 1
+            return tdm(problem.demands, problem.weights,
+                       level_gamma[:, i], x_ext)
     else:
         raise ValueError(f"mode must be 'rdm' or 'tdm': {mode!r}")
-    return fill
+    fill_fn.calls = 0
+    return fill_fn
 
 
 def solve_with_placement(
@@ -692,6 +857,7 @@ def solve_with_placement(
     adaptive_damping: bool = True,
     server_order: str = "fixed",
     seed: int = 0,
+    fill: str = "event",
 ) -> tuple[Allocation, SolveInfo]:
     """Solve one mechanism under one placement strategy.
 
@@ -701,8 +867,12 @@ def solve_with_placement(
     water levels route via repack-and-refill (``lexmm``: identity — the
     per-server fill is already the per-server lexicographic optimum), the
     global-share mechanisms via the routed global fill or the exact
-    ``lexmm`` flow router (see module docstring). The returned
-    ``SolveInfo`` records the strategy and the stranded-capacity fraction.
+    ``lexmm`` flow router (see module docstring). ``fill`` selects the
+    per-server fill engine (``"event"``/``"bisect"``, see
+    ``make_server_fill``) wherever the sweep runs; the one-shot routed
+    strategies have no per-server fill and record ``fill_engine=""``. The
+    returned ``SolveInfo`` records the strategy, the fill engine and
+    inner-iteration count, and the stranded-capacity fraction.
     """
     get_placement(placement)                       # validate early
     if scale is None:
@@ -710,15 +880,18 @@ def solve_with_placement(
     sweep_kw = dict(max_rounds=max_rounds, tol=tol, loose_tol=loose_tol,
                     adaptive_damping=adaptive_damping,
                     server_order=server_order, seed=seed)
-    fill = make_server_fill(problem, level_gamma, mode)
+    fill_fn = make_server_fill(problem, level_gamma, mode, fill=fill)
     if placement == "level" or per_server_rates:
-        x, info = sweep_fixed_point(fill, problem.num_users,
+        x, info = sweep_fixed_point(fill_fn, problem.num_users,
                                     problem.num_servers, scale, x0=x0,
                                     **sweep_kw)
         if placement in ("headroom", "bestfit"):
             x, info = repack_refill(
-                problem, level_gamma, fill, x, info, scale, mode=mode,
+                problem, level_gamma, fill_fn, x, info, scale, mode=mode,
                 greedy=placement == "bestfit", **sweep_kw)
+        info.fill_engine = fill
+        info.fill_iters = fill_fn.calls * fill_iter_budget(
+            problem.num_resources, mode, fill)
         # placement == "lexmm" with per-server rates: the per-server fill
         # is already the per-server lexicographic optimum — identity
     elif placement == "lexmm":
@@ -734,14 +907,14 @@ def solve_with_placement(
                          warm_hits=rstats.warm_hits,
                          warm_fallbacks=rstats.warm_fallbacks,
                          solve_ms=rstats.solve_ms, stage_ms=rstats.stage_ms,
-                         router_mode=rstats.mode)
+                         router_mode=rstats.mode, fill_engine="")
     else:
         if mode != "rdm":
             raise ValueError("routed placement supports RDM level fills only")
         x, events = routed_level_fill(problem, level_gamma,
                                       greedy=placement == "bestfit")
         # one-shot exact fill: no fixed-point iteration, nothing to converge
-        info = SolveInfo(events, True, 0.0)
+        info = SolveInfo(events, True, 0.0, fill_engine="")
     info.placement = placement
     # the stranded metric only needs the eligibility support, and
     # level_gamma > 0 coincides with gamma > 0 for every mechanism (the

@@ -35,12 +35,14 @@ from typing import Optional
 import numpy as np
 
 from .gamma import gamma_matrix
-from .placement import (SolveInfo, server_fill_rdm, server_fill_tdm,
+from .placement import (SolveInfo, server_fill_rdm, server_fill_rdm_bisect,
+                        server_fill_tdm, server_fill_tdm_bisect,
                         solve_with_placement, sweep_fixed_point)
 from .types import Allocation, AllocationProblem
 
 __all__ = [
-    "SolveInfo", "server_fill_rdm", "server_fill_tdm", "sweep_fixed_point",
+    "SolveInfo", "server_fill_rdm", "server_fill_tdm",
+    "server_fill_rdm_bisect", "server_fill_tdm_bisect", "sweep_fixed_point",
     "solve_psdsf_rdm", "solve_psdsf_tdm", "algorithm1_literal",
 ]
 
@@ -54,16 +56,19 @@ def solve_psdsf_rdm(
     adaptive_damping: bool = True,
     placement: str = "level",
     server_order: str = "fixed",
+    fill: str = "event",
 ) -> tuple[Allocation, SolveInfo]:
     """PS-DSF under RDM: sweep servers until fixed point of the rebuild map
     (see ``placement.sweep_fixed_point`` for the damping/acceptance
-    contract and ``placement.solve_with_placement`` for the strategies)."""
+    contract, ``placement.solve_with_placement`` for the strategies, and
+    ``placement.server_fill_rdm_bisect`` for the sort-free ``fill="bisect"``
+    engine — identical fixed point, parity-gated in tests)."""
     g = gamma_matrix(problem)
     return solve_with_placement(
         problem, g, placement=placement, mode="rdm", per_server_rates=True,
         scale=g.max(initial=1.0), x0=x0, max_rounds=max_rounds, tol=tol,
         loose_tol=loose_tol, adaptive_damping=adaptive_damping,
-        server_order=server_order)
+        server_order=server_order, fill=fill)
 
 
 def solve_psdsf_tdm(
@@ -75,15 +80,17 @@ def solve_psdsf_tdm(
     adaptive_damping: bool = True,
     placement: str = "level",
     server_order: str = "fixed",
+    fill: str = "event",
 ) -> tuple[Allocation, SolveInfo]:
-    """PS-DSF under TDM (Def. 4 feasibility). Same adaptive damping and
-    approximate-convergence contract as the RDM solver."""
+    """PS-DSF under TDM (Def. 4 feasibility). Same adaptive damping,
+    approximate-convergence contract and ``fill=`` engine axis as the RDM
+    solver."""
     g = gamma_matrix(problem)
     return solve_with_placement(
         problem, g, placement=placement, mode="tdm", per_server_rates=True,
         scale=g.max(initial=1.0), x0=x0, max_rounds=max_rounds, tol=tol,
         loose_tol=loose_tol, adaptive_damping=adaptive_damping,
-        server_order=server_order)
+        server_order=server_order, fill=fill)
 
 
 # ---------------------------------------------------------------------------

@@ -118,8 +118,153 @@ def _fill_one_server_tdm(demands, phi, gamma_i, x_ext):
     return x
 
 
+def _bisect_steps(dtype) -> int:
+    """Static bisection-step count by dtype (see ``placement.BISECT_STEPS``):
+    48 halvings reach ~3.6e-15 of the initial bracket in f64; past 26 the
+    f32 bracket is below ulp and further steps are no-ops."""
+    from .placement import BISECT_STEPS, BISECT_STEPS_F32
+    return BISECT_STEPS if dtype == jnp.float64 else BISECT_STEPS_F32
+
+
+def _fill_one_server_rdm_bisect(cap, demands, phi, gamma_i, x_ext):
+    """Sort-free twin of ``_fill_one_server_rdm`` via monotone bisection
+    (the jitted mirror of ``placement.server_fill_rdm_bisect``).
+
+    Per saturation event the first crossing level is a root of the monotone
+    piecewise-linear usage ``U_r(L)``; it is bracketed by [current level,
+    max active floor + tightest headroom/total-slope step] and narrowed by
+    bisection *only until the bracket contains no active floor breakpoint*
+    — on a breakpoint-free bracket every ``U_r`` is linear, so the event
+    level is the exact closed-form segment root (tighter than any fixed
+    step count; the static ``_bisect_steps`` bound is just the worst-case
+    cap). Each probe is one (N,)x(N,R) contraction — no argsort, no cumsum
+    breakpoint scan, and no data-dependent indexing, which is what lets
+    the Jacobi round mode vmap whole rounds and the ``kernels/psdsf_fill``
+    Pallas kernel turn the probe into a server-tiled matmul. The event
+    loop itself is a ``while_loop`` that exits as soon as no user is
+    active or no resource can bind (typically after 1-2 events, not R+1).
+    The bind tolerance is the event engine's level tolerance ``_TOL``
+    scaled by the local slope (plus an ulp-guard so the bracket endpoint
+    itself always binds); fixed points agree with the event engine to
+    root precision (~1e-13, parity-gated).
+    """
+    n, r_cnt = demands.shape
+    dt = demands.dtype
+    steps = _bisect_steps(dt)
+    eligible = gamma_i > 0
+    rate = jnp.where(eligible, phi * gamma_i, 0.0)
+    floor = jnp.where(eligible, x_ext / jnp.maximum(rate, 1e-300), _BIG)
+    cap_scale = jnp.maximum(1.0, cap.max())
+    eps = jnp.asarray(jnp.finfo(dt).eps, dt)
+    level_tol = jnp.maximum(jnp.asarray(_TOL, dt), 32 * eps)
+
+    def ev_cond(carry):
+        x, active, saturated, frozen_usage, level, ev = carry
+        slope_tot = jnp.where(active, rate, 0.0) @ demands
+        can_bind = (~saturated) & (slope_tot > _TOL)
+        return active.any() & can_bind.any() & (ev < r_cnt + 1)
+
+    def ev_body(carry):
+        x, active, saturated, frozen_usage, level, ev = carry
+        rate_a = jnp.where(active, rate, 0.0)
+
+        def usage_at(lvl):
+            return frozen_usage + (rate_a * jnp.maximum(lvl - floor, 0.0)
+                                   ) @ demands
+
+        slope_tot = rate_a @ demands                              # (R,)
+        can_bind = (~saturated) & (slope_tot > _TOL)
+        lo0 = level
+        hi0 = jnp.maximum(jnp.where(active, floor, 0.0).max(), lo0)
+        head = jnp.maximum(cap - usage_at(hi0), 0.0)
+        step_up = jnp.where(can_bind,
+                            head / jnp.maximum(slope_tot, 1e-300), _BIG).min()
+        hi_init = hi0 + step_up            # finite: ev_cond ensures can_bind
+
+        def b_cond(lhi):
+            lo, hi, it = lhi
+            inside = active & (floor > lo) & (floor < hi)
+            return inside.any() & (it < steps)
+
+        def b_body(lhi):
+            lo, hi, it = lhi
+            mid = 0.5 * (lo + hi)
+            crossed = jnp.where(can_bind, usage_at(mid) - cap, -1.0).max() >= 0
+            return (jnp.where(crossed, lo, mid),
+                    jnp.where(crossed, mid, hi), it + 1)
+
+        lo, hi, _ = jax.lax.while_loop(
+            b_cond, b_body, (lo0, hi_init, jnp.asarray(0, jnp.int32)))
+        # No active floor strictly inside (lo, hi): every U_r is linear on
+        # the bracket, so the first crossing is the exact segment root.
+        seg_slope = (rate_a * (floor <= lo)) @ demands
+        u_lo = usage_at(lo)
+        root = lo + jnp.maximum(cap - u_lo, 0.0) / jnp.maximum(seg_slope,
+                                                               1e-300)
+        root = jnp.where(seg_slope > _TOL, root, _BIG)
+        root = jnp.where(u_lo >= cap, lo, root)
+        best = jnp.where(can_bind, jnp.minimum(root, hi), _BIG).min()
+        best = jnp.maximum(best, level)
+        u = usage_at(best)
+        lslope = (rate_a * (floor <= best)) @ demands
+        bind = can_bind & (cap - u <= lslope * level_tol
+                           + 32 * eps * cap_scale)
+        x = jnp.where(active, rate_a * jnp.maximum(best - floor, 0.0), x)
+        newly_frozen = active & ((demands * bind[None, :]).sum(axis=1) > 0)
+        frozen_usage = frozen_usage + jnp.where(newly_frozen, x, 0.0) @ demands
+        return (x, active & ~newly_frozen, saturated | bind, frozen_usage,
+                best, ev + 1)
+
+    init = (jnp.zeros(n, dt), eligible, cap <= _TOL * cap_scale,
+            jnp.zeros(r_cnt, dt), jnp.asarray(0.0, dt),
+            jnp.asarray(0, jnp.int32))
+    x, *_ = jax.lax.while_loop(ev_cond, ev_body, init)
+    return x
+
+
+def _fill_one_server_tdm_bisect(demands, phi, gamma_i, x_ext):
+    """Sort-free TDM fill: one scalar bisection on the single virtual
+    time-share resource ``sum_n phi_n max(0, L - f_n) = 1`` (jitted mirror
+    of ``placement.server_fill_tdm_bisect``). Bisection stops once the
+    bracket is breakpoint-free and the exact linear-segment root finishes
+    the solve (``_bisect_steps`` is only the worst-case cap)."""
+    del demands
+    dt = phi.dtype
+    steps = _bisect_steps(dt)
+    eligible = gamma_i > 0
+    rate = jnp.where(eligible, phi, 0.0)
+    floor = jnp.where(eligible,
+                      x_ext / jnp.maximum(phi * gamma_i, 1e-300), _BIG)
+    has = eligible.any()
+    fmax = jnp.where(eligible, floor, 0.0).max()
+    hi0 = fmax + 1.0 / jnp.maximum(rate.sum(), 1e-300)
+
+    def b_cond(lhi):
+        lo, hi, it = lhi
+        inside = eligible & (floor > lo) & (floor < hi)
+        return inside.any() & (it < steps)
+
+    def b_body(lhi):
+        lo, hi, it = lhi
+        mid = 0.5 * (lo + hi)
+        crossed = (rate * jnp.maximum(mid - floor, 0.0)).sum() >= 1.0
+        return (jnp.where(crossed, lo, mid),
+                jnp.where(crossed, mid, hi), it + 1)
+
+    lo, hi, _ = jax.lax.while_loop(
+        b_cond, b_body, (jnp.asarray(0.0, dt), hi0,
+                         jnp.asarray(0, jnp.int32)))
+    seg_slope = (rate * (floor <= lo)).sum()
+    u_lo = (rate * jnp.maximum(lo - floor, 0.0)).sum()
+    root = lo + jnp.maximum(1.0 - u_lo, 0.0) / jnp.maximum(seg_slope, 1e-300)
+    level = jnp.where(seg_slope > _TOL, jnp.minimum(root, hi), hi)
+    return jnp.where(eligible & has,
+                     phi * gamma_i * jnp.maximum(0.0, level - floor), 0.0)
+
+
 def _solve_core(demands, capacities, weights, gamma, x0, mode, max_rounds,
-                tol, servers=None, alpha0=1.0, scale=None):
+                tol, servers=None, alpha0=1.0, scale=None, fill="event",
+                round_mode="gauss"):
     """Traced solver body shared by the single and batched entry points.
 
     All array arguments are positional so ``jax.vmap`` maps over them
@@ -135,6 +280,19 @@ def _solve_core(demands, capacities, weights, gamma, x0, mode, max_rounds,
     its fixed point. Callers restricting the sweep should verify with a full
     sweep afterwards (``psdsf_resolve_batched`` does).
 
+    ``fill`` selects the per-server fill engine: ``"event"`` (argsort +
+    saturation-event scan) or ``"bisect"`` (sort-free monotone bisection,
+    same fixed point — see ``_fill_one_server_rdm_bisect``).
+
+    ``round_mode`` selects the outer iteration: ``"gauss"`` (the historical
+    sequential Gauss-Seidel ``fori`` over servers) or ``"jacobi"`` — every
+    server fills against the PREVIOUS round's usage simultaneously, so one
+    round is a single vmapped fill over the server axis (the vectorization
+    the sequential ``fori`` blocks). Jacobi trades per-round progress for
+    parallel width and oscillates more than Gauss-Seidel on coupled
+    instances, so it starts pre-damped (alpha <= 0.5) and leans on the same
+    stall schedule; fixed points are identical where both converge.
+
     The rebuild map has small limit cycles on large instances (the paper
     leaves sweep convergence open, footnote 5); residuals stall ~0.1% of
     scale with undamped sweeps. Damping x <- (1-a) x + a rebuild(x) shrinks
@@ -145,19 +303,40 @@ def _solve_core(demands, capacities, weights, gamma, x0, mode, max_rounds,
     scale = jnp.maximum(1.0, gamma.max() if scale is None else scale)
     k = gamma.shape[1]
     sweep = jnp.arange(k, dtype=jnp.int32) if servers is None else servers
+    if fill not in ("event", "bisect"):
+        raise ValueError(f"fill must be 'event' or 'bisect': {fill!r}")
+    if round_mode not in ("gauss", "jacobi"):
+        raise ValueError(
+            f"round must be 'gauss' or 'jacobi': {round_mode!r}")
 
-    def one_round(x, alpha):
-        def per_server(j, x):
-            i = sweep[j]
-            x_ext = x.sum(axis=1) - x[:, i]
-            if mode == "rdm":
-                xi = _fill_one_server_rdm(
-                    capacities[i], demands, weights, gamma[:, i], x_ext)
-            else:
-                xi = _fill_one_server_tdm(
-                    demands, weights, gamma[:, i], x_ext)
-            return x.at[:, i].set((1.0 - alpha) * x[:, i] + alpha * xi)
-        return jax.lax.fori_loop(0, sweep.shape[0], per_server, x)
+    def fill_server(i, x_ext):
+        if mode == "rdm":
+            f = (_fill_one_server_rdm_bisect if fill == "bisect"
+                 else _fill_one_server_rdm)
+            return f(capacities[i], demands, weights, gamma[:, i], x_ext)
+        f = (_fill_one_server_tdm_bisect if fill == "bisect"
+             else _fill_one_server_tdm)
+        return f(demands, weights, gamma[:, i], x_ext)
+
+    if round_mode == "jacobi":
+        # damped Jacobi: every listed server refills against the previous
+        # round's usage in one vmapped shot
+        alpha0 = min(alpha0, 0.5)
+        fill_all = jax.vmap(fill_server, in_axes=(0, 1), out_axes=1)
+
+        def one_round(x, alpha):
+            x_ext = x.sum(axis=1, keepdims=True) - x            # (N, K)
+            xi = fill_all(sweep, x_ext[:, sweep])
+            return x.at[:, sweep].set(
+                (1.0 - alpha) * x[:, sweep] + alpha * xi)
+    else:
+        def one_round(x, alpha):
+            def per_server(j, x):
+                i = sweep[j]
+                x_ext = x.sum(axis=1) - x[:, i]
+                xi = fill_server(i, x_ext)
+                return x.at[:, i].set((1.0 - alpha) * x[:, i] + alpha * xi)
+            return jax.lax.fori_loop(0, sweep.shape[0], per_server, x)
 
     def cond(carry):
         _, rounds, _, _, resid = carry
@@ -251,7 +430,8 @@ def _repack_core(x, demands, capacities, weights, level_gamma, mode):
 
 def _repack_refill_core(demands, capacities, weights, gamma, x, rounds,
                         resid, mode, max_rounds, tol, passes=3,
-                        min_gain=1e-6, loose_tol=5e-3):
+                        min_gain=1e-6, loose_tol=5e-3, fill="event",
+                        round_mode="gauss"):
     """Headroom placement for PS-DSF: improve a level fixed point with up to
     ``passes`` repack + warm-refill rounds, keeping a round only when the
     refill re-certifies and the stranded fraction measurably drops (the
@@ -267,7 +447,8 @@ def _repack_refill_core(demands, capacities, weights, gamma, x, rounds,
         x_b, s_b, rounds_b, resid_b = carry
         xr = _repack_core(x_b, demands, capacities, weights, gamma, mode)
         x2, r2, res2 = _solve_core(demands, capacities, weights, gamma, xr,
-                                   mode, max_rounds, tol)
+                                   mode, max_rounds, tol, fill=fill,
+                                   round_mode=round_mode)
         s2 = stranded_fraction_jnp(demands, capacities, gamma, x2)
         accept_tol = jnp.maximum(tol, loose_tol)
         ok = (res2 <= accept_tol * scale) & (s2 < s_b - min_gain)
@@ -291,10 +472,12 @@ def _check_placement(placement: str) -> None:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("mode", "max_rounds", "placement"))
+                   static_argnames=("mode", "max_rounds", "placement",
+                                    "fill", "round"))
 def psdsf_solve_jax(demands, capacities, weights, gamma, *, x0=None,
                     mode: str = "rdm", max_rounds: int = 256,
-                    tol: float = 1e-6, placement: str = "level"):
+                    tol: float = 1e-6, placement: str = "level",
+                    fill: str = "event", round: str = "gauss"):
     """Solve PS-DSF. Returns (x (N,K), rounds, residual).
 
     ``gamma`` is the (N, K) eligibility-masked monopolization matrix; compute
@@ -308,6 +491,13 @@ def psdsf_solve_jax(demands, capacities, weights, gamma, *, x0=None,
     the rebuild map's fixed points do not depend on the starting point, so a
     warm start changes only the round count, not the solution.
 
+    ``fill`` selects the per-server fill engine (``"event"``/``"bisect"``)
+    and ``round`` the outer iteration (``"gauss"``/``"jacobi"``) — see
+    ``_solve_core``; the bisect fill is the sort-free engine the
+    ``fill_comparison`` benchmark gates at >= 3x over the event fill on the
+    dense pinned instance, and damped Jacobi is its whole-cluster vmapped
+    round. Both default to the historical engines.
+
     ``placement="headroom"`` follows the level solve with jitted
     repack-and-refill passes (``_repack_refill_core``); ``"lexmm"`` is the
     identity on the level solve (PS-DSF's per-server fill is already the
@@ -320,18 +510,22 @@ def psdsf_solve_jax(demands, capacities, weights, gamma, *, x0=None,
     if x0 is None:
         x0 = jnp.zeros((n, k), dtype=dtype)
     out = _solve_core(demands, capacities, weights, gamma,
-                      x0.astype(dtype), mode, max_rounds, tol)
+                      x0.astype(dtype), mode, max_rounds, tol, fill=fill,
+                      round_mode=round)
     if placement == "headroom":
         out = _repack_refill_core(demands, capacities, weights, gamma, *out,
-                                  mode, max_rounds, tol)
+                                  mode, max_rounds, tol, fill=fill,
+                                  round_mode=round)
     return out
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("mode", "max_rounds", "placement"))
+                   static_argnames=("mode", "max_rounds", "placement",
+                                    "fill", "round"))
 def psdsf_solve_batched(demands, capacities, weights, gamma, *, x0=None,
                         mode: str = "rdm", max_rounds: int = 256,
-                        tol: float = 1e-6, placement: str = "level"):
+                        tol: float = 1e-6, placement: str = "level",
+                        fill: str = "event", round: str = "gauss"):
     """Solve B independent PS-DSF problems in one jitted call.
 
     Shapes: demands (B, N, R), capacities (B, K, R), weights (B, N),
@@ -340,7 +534,8 @@ def psdsf_solve_batched(demands, capacities, weights, gamma, *, x0=None,
     converged problem's carry stops updating under the vmapped while_loop).
 
     Pad heterogeneous problems with ``batch_problems``; padding is inert
-    (see module docstring). ``placement`` as in ``psdsf_solve_jax``.
+    (see module docstring). ``placement``/``fill``/``round`` as in
+    ``psdsf_solve_jax``.
     """
     _check_placement(placement)
     b, n, k = gamma.shape
@@ -349,10 +544,11 @@ def psdsf_solve_batched(demands, capacities, weights, gamma, *, x0=None,
         x0 = jnp.zeros((b, n, k), dtype=dtype)
 
     def solve(d, c, w, g, x0_):
-        out = _solve_core(d, c, w, g, x0_, mode, max_rounds, tol)
+        out = _solve_core(d, c, w, g, x0_, mode, max_rounds, tol, fill=fill,
+                          round_mode=round)
         if placement == "headroom":
             out = _repack_refill_core(d, c, w, g, *out, mode, max_rounds,
-                                      tol)
+                                      tol, fill=fill, round_mode=round)
         return out
 
     return jax.vmap(solve)(demands, capacities, weights, gamma,
@@ -360,10 +556,12 @@ def psdsf_solve_batched(demands, capacities, weights, gamma, *, x0=None,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("mode", "max_rounds", "placement"))
+                   static_argnames=("mode", "max_rounds", "placement",
+                                    "fill", "round"))
 def psdsf_resolve_batched(demands, capacities, weights, gamma, x0, servers, *,
                           mode: str = "rdm", max_rounds: int = 64,
-                          tol: float = 1e-4, placement: str = "level"):
+                          tol: float = 1e-4, placement: str = "level",
+                          fill: str = "event", round: str = "gauss"):
     """Event-driven incremental re-solve of B perturbed problems.
 
     ``servers`` (B, S) int32 lists the servers each scenario's events touch
@@ -380,6 +578,8 @@ def psdsf_resolve_batched(demands, capacities, weights, gamma, x0, servers, *,
 
     ``placement="headroom"`` appends repack-and-refill passes after the
     verification sweep (full sweeps — the repack is global by nature).
+    ``fill``/``round`` select the fill engine and outer iteration for both
+    phases, as in ``psdsf_solve_jax``.
     """
     _check_placement(placement)
 
@@ -388,17 +588,20 @@ def psdsf_resolve_batched(demands, capacities, weights, gamma, x0, servers, *,
         # absorb a cell-local perturbation in a few sweeps without fully
         # re-exciting the restricted subproblem's limit cycle.
         x, r_restricted, _ = _solve_core(d, c, w, g, x0_, mode, max_rounds,
-                                         tol, servers=srv, alpha0=0.3)
+                                         tol, servers=srv, alpha0=0.3,
+                                         fill=fill, round_mode=round)
         # Verification starts pre-damped at alpha ~ the level where a cold
         # solve's own schedule accepts (resid ~ alpha * cycle amplitude
         # crosses tol around alpha ~ 0.02 at scheduler tolerance), so
         # incremental and cold solves end with equal-strength certificates;
         # an undamped full sweep here would just re-excite the limit cycle.
         x, r_full, resid = _solve_core(d, c, w, g, x, mode, max_rounds, tol,
-                                       alpha0=0.02)
+                                       alpha0=0.02, fill=fill,
+                                       round_mode=round)
         if placement == "headroom":
             x, r_full, resid = _repack_refill_core(
-                d, c, w, g, x, r_full, resid, mode, max_rounds, tol)
+                d, c, w, g, x, r_full, resid, mode, max_rounds, tol,
+                fill=fill, round_mode=round)
         return x, r_restricted, r_full, resid
 
     return jax.vmap(one)(demands, capacities, weights, gamma,
@@ -457,19 +660,22 @@ def gamma_matrix_jnp(demands, capacities, eligibility):
 
 
 def solve_psdsf_rdm_jax(problem: AllocationProblem, x0=None,
-                        max_rounds: int = 64) -> Allocation:
-    """Convenience wrapper producing the same container as the numpy solver."""
+                        max_rounds: int = 64, fill: str = "event",
+                        round: str = "gauss") -> Allocation:
+    """Convenience wrapper producing the same container as the numpy solver
+    (``fill``/``round`` select the fill engine and outer iteration)."""
     g = gamma_matrix(problem)
     x, _, _ = psdsf_solve_jax(
         jnp.asarray(problem.demands), jnp.asarray(problem.capacities),
         jnp.asarray(problem.weights), jnp.asarray(g),
         x0=None if x0 is None else jnp.asarray(x0),
-        mode="rdm", max_rounds=max_rounds)
+        mode="rdm", max_rounds=max_rounds, fill=fill, round=round)
     return Allocation(problem, np.asarray(x, dtype=np.float64))
 
 
 def solve_psdsf_tdm_jax(problem: AllocationProblem, x0=None,
-                        max_rounds: int = 64) -> Allocation:
+                        max_rounds: int = 64, fill: str = "event",
+                        round: str = "gauss") -> Allocation:
     """PS-DSF under time-division multiplexing on the jitted jax backend
     (continuous task fractions; RDM variant is ``solve_psdsf_rdm_jax``)."""
     g = gamma_matrix(problem)
@@ -477,5 +683,5 @@ def solve_psdsf_tdm_jax(problem: AllocationProblem, x0=None,
         jnp.asarray(problem.demands), jnp.asarray(problem.capacities),
         jnp.asarray(problem.weights), jnp.asarray(g),
         x0=None if x0 is None else jnp.asarray(x0),
-        mode="tdm", max_rounds=max_rounds)
+        mode="tdm", max_rounds=max_rounds, fill=fill, round=round)
     return Allocation(problem, np.asarray(x, dtype=np.float64))

@@ -7,4 +7,6 @@ model-layout wrapper) and ref.py (independent pure-jnp oracle):
   decode_attention — split-KV flash decoding over the KV cache
   ssd_scan         — Mamba-2 chunked SSD scan
   psdsf_vds        — the paper's per-server VDS min/argmin tick (Eq. 16)
+  psdsf_fill       — whole-cluster bisection fill (one saturation event
+                     for every server per call; Jacobi-round primitive)
 """

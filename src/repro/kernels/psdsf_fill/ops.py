@@ -1,0 +1,101 @@
+"""Whole-cluster bisection fill built on the ``psdsf_fill`` Pallas kernel.
+
+``fill_cluster_padded`` is the Jacobi-round primitive: rebuild every
+server's fill against a fixed external-usage matrix in one shot. The
+kernel (``kernel.fill_event_levels``) finds each server's next saturation
+level on-chip; this wrapper runs the short freeze-and-repeat event loop
+(<= R+1 iterations) around it with the same bind rule as the jitted
+``core.psdsf_jax._fill_one_server_rdm_bisect`` engine.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .kernel import TOL, fill_event_levels
+
+
+def fill_cluster_padded(cap, demands, phi, gamma, x_ext, *, mode: str = "rdm",
+                        interpret: bool = False):
+    """Rebuild all K server fills from external usage ``x_ext`` at once.
+
+    cap: (K, R); demands: (N, R); phi: (N,); gamma: (N, K); x_ext: (N, K)
+    (user n's task count held on servers other than the column's). Returns
+    the (N, K) fill as numpy. Pads both user and server axes to the
+    kernel's block multiples (padded users get gamma 0, padded servers
+    zero capacity — both inert), so callers don't have to know the tiling.
+    ``mode="tdm"`` maps the time-share constraint onto a single virtual
+    resource of capacity 1. Dtype follows the inputs (f64 under
+    ``jax.config.enable_x64``, else f32), as does the bisection-step cap.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.placement import BISECT_STEPS, BISECT_STEPS_F32
+
+    cap = np.asarray(cap)
+    demands = np.asarray(demands)
+    phi = np.asarray(phi)
+    gamma = np.asarray(gamma)
+    x_ext = np.asarray(x_ext)
+    n, k = gamma.shape
+
+    if mode == "tdm":
+        rate = np.where(gamma > 0, phi[:, None], 0.0)
+        dem = np.ones((n, 1), cap.dtype)
+        caps = np.ones((k, 1), cap.dtype)
+    elif mode == "rdm":
+        rate = np.where(gamma > 0, phi[:, None] * gamma, 0.0)
+        dem = demands
+        caps = cap
+    else:
+        raise ValueError(f"mode must be 'rdm' or 'tdm': {mode!r}")
+    # the fill grows x at phi*gamma per unit level whatever the regime;
+    # ``rate`` above is the *usage* slope (for TDM usage is x/gamma = phi*L)
+    full_rate = np.where(gamma > 0, phi[:, None] * gamma, 0.0)
+    floor = np.where(gamma > 0, x_ext / np.maximum(full_rate, 1e-300), 0.0)
+
+    block_n, block_k = min(256, max(n, 1)), min(128, max(k, 1))
+    n_pad, k_pad = -n % block_n, -k % block_k
+    if n_pad or k_pad:
+        rate = np.pad(rate, ((0, n_pad), (0, k_pad)))
+        full_rate = np.pad(full_rate, ((0, n_pad), (0, k_pad)))
+        floor = np.pad(floor, ((0, n_pad), (0, k_pad)))
+        dem = np.pad(dem, ((0, n_pad), (0, 0)))
+        caps = np.pad(caps, ((0, k_pad), (0, 0)))
+
+    dt = jnp.float64 if jnp.asarray(0.0).dtype == jnp.float64 else jnp.float32
+    steps = BISECT_STEPS if dt == jnp.float64 else BISECT_STEPS_F32
+    rate = jnp.asarray(rate, dt)
+    full_rate = jnp.asarray(full_rate, dt)
+    floor = jnp.asarray(floor, dt)
+    dem_j = jnp.asarray(dem, dt)
+    caps_j = jnp.asarray(caps, dt)
+    kp, r = caps_j.shape
+    eps = float(jnp.finfo(dt).eps)
+    cap_scale = max(1.0, float(caps_j.max()))
+    level_tol = max(TOL, 32 * eps)
+
+    x = jnp.zeros_like(rate)
+    active = rate > 0
+    saturated = caps_j <= TOL * cap_scale
+    frozen = jnp.zeros((kp, r), dt)
+    level = jnp.zeros((kp,), dt)
+    events = 1 if mode == "tdm" else r + 1
+    for _ in range(events):
+        rate_a = jnp.where(active, rate, 0.0)
+        floors_a = jnp.where(active, floor, 0.0)
+        lvl, u, lsl, slope = fill_event_levels(
+            floors_a, rate_a, dem_j, caps_j, frozen, saturated.astype(dt),
+            level, steps=steps, block_n=block_n, block_k=block_k,
+            interpret=interpret)
+        canb = (~saturated) & (slope > TOL)
+        bind = canb & (caps_j - u <= lsl * level_tol + 32 * eps * cap_scale)
+        x = jnp.where(active,
+                      full_rate * jnp.maximum(lvl[None, :] - floor, 0.0), x)
+        newly = active & (jnp.einsum("nr,kr->nk", dem_j,
+                                     bind.astype(dt)) > 0)
+        frozen = frozen + jnp.einsum("nk,nr->kr",
+                                     jnp.where(newly, x, 0.0), dem_j)
+        saturated = saturated | bind
+        active = active & ~newly
+        level = jnp.maximum(level, lvl)
+    return np.asarray(x)[:n, :k]

@@ -1,0 +1,24 @@
+"""Oracle for the whole-cluster fill: the exact numpy *event* engine run
+server-by-server (``core.placement.server_fill_rdm`` / ``_tdm``). The
+Pallas kernel path must reproduce these fills — same fixed point, checked
+to 1e-9 in the golden-parity suite."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.placement import server_fill_rdm, server_fill_tdm
+
+
+def fill_cluster_ref(cap, demands, phi, gamma, x_ext, *, mode: str = "rdm"):
+    """cap: (K, R); demands: (N, R); phi: (N,); gamma: (N, K);
+    x_ext: (N, K) -> (N, K) fill, one exact event-driven server fill per
+    column."""
+    n, k = gamma.shape
+    x = np.zeros((n, k))
+    for i in range(k):
+        if mode == "rdm":
+            x[:, i] = server_fill_rdm(cap[i], demands, phi, gamma[:, i],
+                                      x_ext[:, i])
+        else:
+            x[:, i] = server_fill_tdm(demands, phi, gamma[:, i], x_ext[:, i])
+    return x

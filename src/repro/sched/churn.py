@@ -64,6 +64,9 @@ class ChurnRecord:
     warm_hits: int = 0       # traced stages reused via verification
     warm_fallbacks: int = 0  # loud flag: the event delta forced a full solve
     router_mode: str = ""    # "verify" / "incremental" / "fallback" / "warm"
+    # fill-engine observability (mirrors SolveInfo.fill_engine/fill_iters):
+    fill_engine: str = ""    # "event" / "bisect" ("" if the tick flow-routed)
+    fill_iters: int = 0      # inner-iteration budget the re-solve spent
 
 
 #: sweep-based mechanisms the simulator can maintain a fixed point for
@@ -91,6 +94,11 @@ class ChurnSimulator:
     exact host-side flow router per tick for the global-share mechanisms
     (one-shot exact — warm starts have nothing to speed up, and
     ``rounds`` then reports the router's freeze stages).
+
+    ``fill`` ("event"/"bisect") and ``round`` ("gauss"/"jacobi") pick the
+    per-server fill engine and outer iteration of the jitted sweep (see
+    ``psdsf_jax._solve_core``); each record reports them back as
+    ``fill_engine``/``fill_iters``.
     """
 
     def __init__(self, problem: AllocationProblem, mode: Optional[str] = None,
@@ -98,10 +106,11 @@ class ChurnSimulator:
                  max_rounds: int = 256, tol: float = 1e-6,
                  initial_active: Optional[np.ndarray] = None,
                  telemetry: bool = True, interpret_vds: bool = True,
-                 mechanism: Optional[str] = None, placement: str = "level"):
+                 mechanism: Optional[str] = None, placement: str = "level",
+                 fill: str = "event", round: str = "gauss"):
         import jax.numpy as jnp
 
-        from repro.core.placement import get_placement
+        from repro.core.placement import FILL_ENGINES, get_placement
 
         if mode is not None and mechanism is not None:
             raise ValueError(
@@ -120,9 +129,15 @@ class ChurnSimulator:
             raise ValueError(
                 f"the churn tick runs on the jitted engine; placement "
                 f"{placement!r} has no jitted mirror (numpy only)")
+        if fill not in FILL_ENGINES:
+            raise ValueError(f"fill must be one of {FILL_ENGINES}: {fill!r}")
+        if round not in ("gauss", "jacobi"):
+            raise ValueError(f"round must be 'gauss' or 'jacobi': {round!r}")
         self.problem = problem
         self.mechanism = mechanism
         self.placement = placement
+        self.fill = fill
+        self.round = round
         self.warm_start = warm_start
         self.compare_cold = compare_cold
         self.max_rounds = max_rounds
@@ -169,7 +184,8 @@ class ChurnSimulator:
             jnp.asarray(self.active), jnp.asarray(self.cap_scale, jnp.float32),
             None if x0 is None else jnp.asarray(x0, jnp.float32),
             mechanism=self.mechanism, max_rounds=self.max_rounds,
-            tol=self.tol, placement=self.placement)
+            tol=self.tol, placement=self.placement, fill=self.fill,
+            round=self.round)
         return np.array(x, dtype=np.float64), int(rounds), float(resid)
 
     def _solve_lexmm_host(self) -> tuple[np.ndarray, int, float]:
@@ -219,6 +235,14 @@ class ChurnSimulator:
             _, cold_rounds, _ = self._solve(None)
         self.x = x
         mn, arg = (self._min_vds() if self.telemetry else (np.inf, -1))
+        from repro.core.placement import fill_iter_budget
+
+        psdsf = self.mechanism in ("psdsf-rdm", "psdsf-tdm")
+        swept = rs is None and (psdsf or self.placement != "headroom")
+        budget = (rounds * self.problem.num_servers * fill_iter_budget(
+            self.problem.num_resources,
+            "tdm" if self.mechanism == "psdsf-tdm" else "rdm", self.fill)
+            if swept else 0)
         return ChurnRecord(
             time=time_now, n_events=len(events), rounds=rounds,
             cold_rounds=cold_rounds, residual=resid,
@@ -228,7 +252,9 @@ class ChurnSimulator:
             lp_calls=0 if rs is None else rs.lp_calls,
             warm_hits=0 if rs is None else rs.warm_hits,
             warm_fallbacks=0 if rs is None else rs.warm_fallbacks,
-            router_mode="" if rs is None else rs.mode)
+            router_mode="" if rs is None else rs.mode,
+            fill_engine=self.fill if swept else "",
+            fill_iters=budget)
 
     def run(self, events: Sequence[ChurnEvent]) -> List[ChurnRecord]:
         """Consume a whole stream: batch same-timestamp events, one re-solve
@@ -282,9 +308,11 @@ def _resolve_fn():
                                       gamma_matrix_jnp)
 
     @functools.partial(jax.jit, static_argnames=("mechanism", "max_rounds",
-                                                 "placement"))
+                                                 "placement", "fill",
+                                                 "round"))
     def resolve(demands, capacities, weights, eligibility, active, cap_scale,
-                x0, *, mechanism, max_rounds, tol, placement="level"):
+                x0, *, mechanism, max_rounds, tol, placement="level",
+                fill="event", round="gauss"):
         caps_eff = capacities * cap_scale[:, None]
         g = gamma_matrix_jnp(demands, caps_eff, eligibility)
         g = jnp.where(active[:, None], g, 0.0)
@@ -313,10 +341,12 @@ def _resolve_fn():
         # (the baseline level rates sum gamma over servers — see
         # baselines_jax; and a departed huge-gamma user must not loosen it)
         out = _solve_core(demands, caps_eff, weights, lg, x0, mode,
-                          max_rounds, tol, scale=g.max())
+                          max_rounds, tol, scale=g.max(), fill=fill,
+                          round_mode=round)
         if placement == "headroom":
             out = _repack_refill_core(demands, caps_eff, weights, g, *out,
-                                      mode, max_rounds, tol)
+                                      mode, max_rounds, tol, fill=fill,
+                                      round_mode=round)
         return out
 
     return resolve

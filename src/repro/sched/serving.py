@@ -102,23 +102,24 @@ class DynamicDispatcher:
     """Asynchronous per-group PS-DSF ticks for tenant churn (Section III-D /
     the Section V experiment, at the serving layer).
 
-    ``engine``/``precision``/``placement`` thread straight through to
-    ``DistributedPSDSF`` (the jitted tick engine, its dtype, and the
-    placement strategy), matching the knobs ``ChurnSimulator`` and
-    ``admitted_rates`` already expose — a dispatcher ticked to equilibrium
-    reproduces ``admitted_rates(..., mechanism="psdsf-<mode>")`` quotas
+    ``engine``/``precision``/``placement``/``fill`` thread straight
+    through to ``DistributedPSDSF`` (the jitted tick engine, its dtype,
+    the placement strategy, and the per-server fill engine), matching the
+    knobs ``ChurnSimulator`` and ``admitted_rates`` already expose — a
+    dispatcher ticked to equilibrium reproduces
+    ``admitted_rates(..., mechanism="psdsf-<mode>")`` quotas
     (regression-pinned in tests/test_lexmm.py).
     """
 
     def __init__(self, groups: Sequence[ReplicaGroup],
                  tenants: Sequence[Tenant], mode: str = "rdm",
                  engine: str = "numpy", precision: str = "highest",
-                 placement: str = "level"):
+                 placement: str = "level", fill: str = "event"):
         self.groups = list(groups)
         self.tenants = list(tenants)
         self.sim = DistributedPSDSF(dispatch_problem(groups, tenants), mode,
                                     engine=engine, precision=precision,
-                                    placement=placement)
+                                    placement=placement, fill=fill)
 
     def set_active(self, tenant_name: str, active: bool):
         """Tenant arrival/departure by name (delegates to the simulator)."""

@@ -1,0 +1,135 @@
+"""Interpret-mode lane for the scheduler Pallas kernels (ISSUE-7 CI
+satellite): ``psdsf_vds``, ``psdsf_fill`` and the ``_compat`` shim, all
+runnable on a CPU-only box (``JAX_PLATFORMS=cpu``) — this file IS the CI
+"kernels (interpret)" step, so it must stay importable and green with no
+TPU anywhere.
+
+The deep fill-engine parity suite lives in ``tests/test_fill_bisect.py``;
+here each kernel is exercised against its independent oracle through the
+``interpret=True`` path specifically (grid/BlockSpec/scratch plumbing, the
+padded-layout wrappers, and dtype genericity under ``enable_x64``).
+"""
+import numpy as np
+import pytest
+
+from repro.core import gamma_matrix, solve_psdsf_rdm
+from repro.core.instances import (dense_random_instance, fig1_instance,
+                                  fig2_instance)
+
+from conftest import random_problems
+
+
+# function-scoped: a module-scoped context would leak f64 into the f32
+# tolerance test below
+@pytest.fixture()
+def x64():
+    import jax
+    with jax.experimental.enable_x64():
+        yield
+
+
+class TestCompatShim:
+    def test_compiler_params_resolves(self):
+        from repro.kernels import _compat
+        params = _compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+        assert params.dimension_semantics == ("parallel", "arbitrary")
+
+    def test_all_kernels_import_the_shim(self):
+        # every kernel module must route its compiler params through the
+        # shim — a direct pltpu.TPUCompilerParams reference would break on
+        # one side of the jax rename this file exists to absorb
+        import ast
+        import inspect
+
+        from repro.kernels.psdsf_fill import kernel as fill_kernel
+        from repro.kernels.psdsf_vds import kernel as vds_kernel
+        for mod in (vds_kernel, fill_kernel):
+            tree = ast.parse(inspect.getsource(mod))
+            names = {n.attr for n in ast.walk(tree)
+                     if isinstance(n, ast.Attribute)}
+            assert "TPUCompilerParams" not in names, mod.__name__
+
+
+class TestPsdsfVds:
+    def test_vds_argmin_matches_ref(self):
+        from repro.kernels.psdsf_vds.kernel import vds_argmin
+        from repro.kernels.psdsf_vds.ref import vds_argmin_ref
+        rng = np.random.default_rng(5)
+        x_over_phi = rng.uniform(0.0, 10.0, 96).astype(np.float32)
+        gamma = (rng.uniform(0.0, 2.0, (96, 24)) *
+                 (rng.random((96, 24)) > 0.4)).astype(np.float32)
+        got_mn, got_arg = vds_argmin(x_over_phi, gamma, interpret=True)
+        ref_mn, ref_arg = vds_argmin_ref(x_over_phi, gamma)
+        np.testing.assert_allclose(np.asarray(got_mn), np.asarray(ref_mn),
+                                   rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(got_arg),
+                                      np.asarray(ref_arg))
+
+
+class TestPsdsfFill:
+    @pytest.mark.parametrize("mode", ["rdm", "tdm"])
+    @pytest.mark.parametrize("prob_fn", [fig1_instance, fig2_instance,
+                                         dense_random_instance])
+    def test_cluster_fill_matches_oracle_f64(self, x64, mode, prob_fn):
+        from repro.kernels.psdsf_fill.ops import fill_cluster_padded
+        from repro.kernels.psdsf_fill.ref import fill_cluster_ref
+        prob = prob_fn()
+        g = gamma_matrix(prob)
+        rng = np.random.default_rng(9)
+        x_ext = rng.uniform(0.0, 2.0, (prob.num_users, prob.num_servers))
+        got = fill_cluster_padded(prob.capacities, prob.demands,
+                                  prob.weights, g, x_ext, mode=mode,
+                                  interpret=True)
+        want = fill_cluster_ref(prob.capacities, prob.demands, prob.weights,
+                                g, x_ext, mode=mode)
+        np.testing.assert_allclose(got, want, atol=1e-9)
+
+    def test_cluster_fill_random_instances_f64(self, x64):
+        from repro.kernels.psdsf_fill.ops import fill_cluster_padded
+        from repro.kernels.psdsf_fill.ref import fill_cluster_ref
+        rng = np.random.default_rng(21)
+        for prob in random_problems(4, seed=13):
+            g = gamma_matrix(prob)
+            x_ext = rng.uniform(0.0, 3.0,
+                                (prob.num_users, prob.num_servers))
+            got = fill_cluster_padded(prob.capacities, prob.demands,
+                                      prob.weights, g, x_ext, mode="rdm",
+                                      interpret=True)
+            want = fill_cluster_ref(prob.capacities, prob.demands,
+                                    prob.weights, g, x_ext, mode="rdm")
+            np.testing.assert_allclose(got, want, atol=1e-9)
+
+    def test_cluster_fill_f32_tolerance_pinned(self):
+        # without enable_x64 the kernel runs in f32 with the shorter
+        # bisection-step cap — parity loosens to ~1e-7 RELATIVE (9.7e-8
+        # measured on the cell instance); pin the f32 contract here
+        from repro.core.instances import cell_cluster_instance
+        from repro.kernels.psdsf_fill.ops import fill_cluster_padded
+        from repro.kernels.psdsf_fill.ref import fill_cluster_ref
+        cell, _, _ = cell_cluster_instance(num_users=256, num_servers=32,
+                                           cells=4, seed=0)
+        g = gamma_matrix(cell)
+        rng = np.random.default_rng(2)
+        x_ext = rng.uniform(0.0, 2.0, (cell.num_users, cell.num_servers))
+        got = fill_cluster_padded(cell.capacities, cell.demands,
+                                  cell.weights, g, x_ext, mode="rdm",
+                                  interpret=True)
+        want = fill_cluster_ref(cell.capacities, cell.demands, cell.weights,
+                                g, x_ext, mode="rdm")
+        scale = max(float(np.abs(want).max()), 1.0)
+        assert float(np.abs(got - want).max()) <= 5e-6 * scale
+
+    def test_fixed_point_is_invariant(self, x64):
+        # one whole-cluster Jacobi fill AT the solved fixed point must be
+        # the identity — ties the kernel to the solver contract, not just
+        # to the oracle
+        from repro.kernels.psdsf_fill.ops import fill_cluster_padded
+        prob = fig2_instance()
+        alloc, _ = solve_psdsf_rdm(prob)
+        g = gamma_matrix(prob)
+        x_ext = alloc.x.sum(axis=1, keepdims=True) - alloc.x
+        got = fill_cluster_padded(prob.capacities, prob.demands,
+                                  prob.weights, g, x_ext, mode="rdm",
+                                  interpret=True)
+        np.testing.assert_allclose(got, alloc.x, atol=1e-9)
