@@ -18,7 +18,14 @@ Reads a ``benchmarks/run.py --json``/``--out`` artifact and fails when:
     acceptance: the sort-free engine must be fast AND bit-faithful, never
     one at the other's expense. The numpy bisect parity row is gated on
     ``maxdiff`` only (it is the fixed-step reference the Pallas kernel
-    mirrors, not a speed contender).
+    mirrors, not a speed contender);
+  * the ``sparse_scale`` self-certification fails: the jitted bucketed
+    engine's ``sparse_jit_bucketed`` row must show at least
+    ``SPARSE_MIN_SPEEDUP`` (3x) over the jitted dense engine on the
+    pinned ~20k x 256 @ ~3%-density instance AND a dense-parity
+    ``maxdiff`` within ``SPARSE_PARITY_ATOL`` (1e-9) — the PR-8
+    acceptance, same shape as the fill gate: speed is never bought with
+    exactness. The numpy active-set row is parity-gated only.
 
 A delta table (baseline us, measured us, ratio, verdict) is always
 printed, gate outcome aside, so the perf trajectory is legible from the
@@ -50,6 +57,15 @@ FILL_SPEED_ROW = "fillcmp_dense_bisect_gauss"
 FILL_MIN_SPEEDUP = 3.0
 FILL_PARITY_ATOL = 1e-9
 FILL_PARITY_ROWS = (FILL_SPEED_ROW, "fillcmp_dense_numpy_bisect")
+
+#: sparse_scale acceptance (the PR-8 headline): the jitted bucketed engine
+#: must beat the jitted dense engine >= 3x on the pinned 20k x 256 @ ~3%
+#: instance AND match its fixed point to 1e-9; the numpy active-set row is
+#: parity-gated only (the python sweep is the readable reference)
+SPARSE_SPEED_ROW = "sparse_jit_bucketed"
+SPARSE_MIN_SPEEDUP = 3.0
+SPARSE_PARITY_ATOL = 1e-9
+SPARSE_PARITY_ROWS = (SPARSE_SPEED_ROW, "sparse_numpy_bucketed")
 
 
 def _parse(derived: str, field: str) -> float | None:
@@ -115,6 +131,32 @@ def main(argv=None) -> int:
                 f"{name}: bisect/event fixed points differ by "
                 f"{maxdiff:.2e} (gate: <= {FILL_PARITY_ATOL})")
 
+    # --- bucketed-engine self-certification (speed AND parity) -----------
+    d = derived.get(SPARSE_SPEED_ROW)
+    if d is None:
+        failures.append(f"missing sparse-scale row {SPARSE_SPEED_ROW}")
+    else:
+        speedup = _parse(d, "speedup")
+        if speedup is None:
+            failures.append(f"{SPARSE_SPEED_ROW}: derived lacks speedup= "
+                            f"({d!r})")
+        elif speedup < SPARSE_MIN_SPEEDUP:
+            failures.append(
+                f"{SPARSE_SPEED_ROW}: bucketed only {speedup:.2f}x over "
+                f"the dense engine (gate: >= {SPARSE_MIN_SPEEDUP}x)")
+    for name in SPARSE_PARITY_ROWS:
+        d = derived.get(name)
+        if d is None:
+            failures.append(f"missing sparse-parity row {name}")
+            continue
+        maxdiff = _parse(d, "maxdiff")
+        if maxdiff is None:
+            failures.append(f"{name}: derived lacks maxdiff= ({d!r})")
+        elif not math.isfinite(maxdiff) or maxdiff > SPARSE_PARITY_ATOL:
+            failures.append(
+                f"{name}: bucketed/dense fixed points differ by "
+                f"{maxdiff:.2e} (gate: <= {SPARSE_PARITY_ATOL})")
+
     if failures:
         print("perf gate FAILED:")
         for f in failures:
@@ -123,7 +165,9 @@ def main(argv=None) -> int:
     print(f"perf gate OK: {len(want_us)} rows within {MAX_RATIO}x of "
           f"baseline (noise floor {NOISE_FLOOR_US:.0f}us); bisect fill "
           f">= {FILL_MIN_SPEEDUP}x and event-exact to {FILL_PARITY_ATOL} "
-          f"on {len(FILL_PARITY_ROWS)} rows")
+          f"on {len(FILL_PARITY_ROWS)} rows; bucketed engine >= "
+          f"{SPARSE_MIN_SPEEDUP}x and dense-exact to {SPARSE_PARITY_ATOL} "
+          f"on {len(SPARSE_PARITY_ROWS)} rows")
     return 0
 
 

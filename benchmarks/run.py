@@ -18,6 +18,10 @@ reproduced quantity or headline metric).
   fill_comparison      jitted event vs sort-free bisect fill engines on the
                        dense instance, self-certifying parity + speedup;
                        gated vs benchmarks/perf_baseline.json in CI
+  sparse_scale         dense vs bucketed (sparse-eligibility) solve engines
+                       on the pinned 20k x 256 @ ~3% instance + the numpy
+                       active-set sweep; self-certifying parity + speedup,
+                       gated like fill_comparison
   dynamic_churn        Poisson event stream through the churn simulator,
                        warm vs cold re-solve rounds
   serving_fairness     PS-DSF admission at the serving layer
@@ -567,6 +571,82 @@ def fill_comparison():
           f"rounds={info_b.rounds} fill_iters={info_b.fill_iters}")
 
 
+def sparse_scale():
+    """Sparse-eligibility bucketed engine vs the dense engine (the PR-8
+    tentpole's perf rows) on the pinned datacenter instance — the
+    ``sparse_cell_instance`` defaults: ~20k users x 256 servers at ~3%
+    eligibility density, f64, ``fill="bisect"``, ``tol=0.0`` + a fixed
+    8-round budget so both layouts execute identical rounds and the parity
+    number is trajectory-vs-trajectory, not an acceptance-round artifact.
+
+    The jitted bucketed row self-certifies ``speedup=`` vs the jitted
+    dense row timed in the same process and ``maxdiff=`` vs its fixed
+    point; ``benchmarks/check_perf.py`` gates >= 3x speedup AND <= 1e-9
+    parity (the PR-8 acceptance: the bucketed engine must be fast AND
+    exact, never one at the other's expense). ``peak_rss_mb=``
+    (``resource.getrusage``) tracks the memory side of the O(nnz) claim.
+    The numpy rows run the active-set sweep on a reduced weak-coupling
+    instance (500 x 64, 2 servers per multi-homed user) with the same
+    fixed-round discipline, adding ``skipped=`` — the active-set win —
+    to the derived column (parity-gated like the jitted row; no speed
+    gate, the python sweep is the readable reference).
+    """
+    import resource
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import gamma_matrix, solve_psdsf_rdm
+    from repro.core.instances import sparse_cell_instance
+    from repro.core.layout import BucketedLayout
+    from repro.core.psdsf_jax import psdsf_solve_jax
+
+    prob, _ = sparse_cell_instance()        # the pinned 20k x 256 @ ~3%
+    g = gamma_matrix(prob)
+    lay = BucketedLayout.from_support(g > 0)
+    with jax.experimental.enable_x64():
+        args = tuple(jnp.asarray(a, jnp.float64)
+                     for a in (prob.demands, prob.capacities,
+                               prob.weights, g))
+        buckets = (jnp.asarray(lay.indices), jnp.asarray(lay.mask))
+        results = {}
+        for layout in ("dense", "bucketed"):
+            def run(layout=layout):
+                return jax.block_until_ready(psdsf_solve_jax(
+                    *args, mode="rdm", max_rounds=8, tol=0.0,
+                    fill="bisect", layout=layout,
+                    buckets=buckets if layout == "bucketed" else None))
+            us, (x, rounds, resid) = _t(run, repeat=2)
+            results[layout] = (us, np.asarray(x), int(rounds),
+                               float(resid))
+    rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+    us_d, x_d, rounds_d, resid_d = results["dense"]
+    us_b, x_b, rounds_b, _ = results["bucketed"]
+    print(f"sparse_jit_dense,{us_d:.0f},rounds={rounds_d} "
+          f"resid={resid_d:.2e} nnz={lay.nnz} density={lay.density:.4f}")
+    print(f"sparse_jit_bucketed,{us_b:.0f},speedup={us_d / us_b:.2f}x "
+          f"maxdiff={float(np.abs(x_b - x_d).max()):.2e} "
+          f"rounds={rounds_b} bucket_max={lay.bucket_max} "
+          f"peak_rss_mb={rss_mb:.0f}")
+    # numpy active-set rows: reduced weak-coupling instance, repeat=1 —
+    # the cold python sweep is the slow path the jitted rows replace
+    small, _ = sparse_cell_instance(num_users=500, num_servers=64,
+                                    density=0.01875, cells=8,
+                                    multi_frac=0.2, seed=4)
+    np_res = {}
+    for layout in ("dense", "bucketed"):
+        us, (alloc, info) = _t(solve_psdsf_rdm, small, layout=layout,
+                               tol=0.0, max_rounds=60, repeat=1)
+        np_res[layout] = (us, alloc.x, info)
+    us_e, x_e, info_e = np_res["dense"]
+    us_s, x_s, info_s = np_res["bucketed"]
+    print(f"sparse_numpy_dense,{us_e:.0f},rounds={info_e.rounds}")
+    print(f"sparse_numpy_bucketed,{us_s:.0f},speedup={us_e / us_s:.2f}x "
+          f"maxdiff={float(np.abs(x_s - x_e).max()):.2e} "
+          f"rounds={info_s.rounds} skipped={info_s.servers_skipped} "
+          f"bucket_max={info_s.bucket_max}")
+
+
 def dynamic_churn():
     """Poisson arrival/departure/degrade stream through ``ChurnSimulator``:
     warm-started re-solve rounds vs cold, per event batch."""
@@ -652,8 +732,8 @@ def roofline_summary():
 ALL_BENCHES = (fig1_examples, fig23_example, table_google_cluster,
                fig6_dynamic, allocator_scaling, allocator_scaling_batched,
                mechanism_comparison, placement_comparison, fill_comparison,
-               dynamic_churn, serving_fairness, kernel_reference,
-               roofline_summary)
+               sparse_scale, dynamic_churn, serving_fairness,
+               kernel_reference, roofline_summary)
 
 
 def main(argv=None) -> None:

@@ -4,11 +4,12 @@ registry (``engine``)."""
 from .types import Allocation, AllocationProblem
 from .gamma import (dominant_resource, gamma_constrained_total, gamma_matrix,
                     gamma_unconstrained_total, normalized_vds, vds)
+from .layout import BucketedLayout, resolve_layout
 from .placement import (PlacementStrategy, SolveInfo, get_placement,
                         list_placements, register_placement,
                         routed_level_fill, server_fill_rdm, server_fill_tdm,
                         solve_with_placement, stranded_fraction,
-                        sweep_fixed_point)
+                        sweep_fixed_point, sweep_fixed_point_bucketed)
 from .flowrouter import (FlowRouterUnavailable, RouterState, RouterStats,
                          lexmm_route, lexmm_route_cold)
 from .trace import Tracer, timed_us
@@ -27,6 +28,7 @@ __all__ = [
     "gamma_unconstrained_total", "gamma_constrained_total",
     "solve_psdsf_rdm", "solve_psdsf_tdm", "algorithm1_literal",
     "server_fill_rdm", "server_fill_tdm", "sweep_fixed_point",
+    "sweep_fixed_point_bucketed", "BucketedLayout", "resolve_layout",
     "PlacementStrategy", "get_placement", "list_placements",
     "register_placement", "routed_level_fill", "solve_with_placement",
     "stranded_fraction", "lexmm_route", "lexmm_route_cold", "RouterState",

@@ -20,8 +20,8 @@ import numpy as np
 
 from .baselines import LEVEL_FILL_MECHANISMS, level_rate_matrix
 from .placement import ROUTED_FILL_CORRECTORS, SolveInfo, stranded_fraction
-from .psdsf_jax import (_BIG, _check_placement, _solve_core, _solve_dtype,
-                        gamma_matrix_jnp)
+from .psdsf_jax import (_BIG, _check_buckets, _check_placement, _solve_core,
+                        _solve_core_bucketed, _solve_dtype, gamma_matrix_jnp)
 from .types import Allocation, AllocationProblem
 
 _TOL = 1e-9
@@ -155,11 +155,12 @@ def _reject_lexmm_traced(placement: str) -> None:
 
 
 @functools.partial(jax.jit, static_argnames=("max_rounds", "placement",
-                                             "fill", "round"))
+                                             "fill", "round", "layout"))
 def baseline_solve_jax(demands, capacities, weights, level_gamma, *, x0=None,
                        max_rounds: int = 256, tol: float = 1e-6,
                        placement: str = "level", fill: str = "event",
-                       round: str = "gauss"):
+                       round: str = "gauss", layout: str = "dense",
+                       buckets=None):
     """Solve one exact baseline fill. Returns (x (N,K), rounds, residual).
 
     ``level_gamma`` is the (N, K) level-rate matrix from
@@ -176,39 +177,70 @@ def baseline_solve_jax(demands, capacities, weights, level_gamma, *, x0=None,
     """
     _check_placement(placement)
     _reject_lexmm_traced(placement)
+    _check_buckets(layout, buckets)
     if placement == "headroom":
+        if layout == "bucketed":
+            raise ValueError("layout='bucketed' needs the per-server sweep; "
+                             "the routed headroom fill is one-shot global — "
+                             "use layout='dense'")
         return _routed_fill_core(demands, capacities, weights, level_gamma)
     n, k = level_gamma.shape
     dtype = _solve_dtype(demands)
     if x0 is None:
         x0 = jnp.zeros((n, k), dtype=dtype)
+    scale = _gamma_scale(demands, capacities, level_gamma)
+    if layout == "bucketed":
+        idx, mask = buckets
+        return _solve_core_bucketed(demands, capacities, weights,
+                                    level_gamma, x0.astype(dtype), idx, mask,
+                                    "rdm", max_rounds, tol, scale=scale,
+                                    fill=fill, round_mode=round)
     return _solve_core(demands, capacities, weights, level_gamma,
                        x0.astype(dtype), "rdm", max_rounds, tol,
-                       scale=_gamma_scale(demands, capacities, level_gamma),
-                       fill=fill, round_mode=round)
+                       scale=scale, fill=fill, round_mode=round)
 
 
 @functools.partial(jax.jit, static_argnames=("max_rounds", "placement",
-                                             "fill", "round"))
+                                             "fill", "round", "layout"))
 def baseline_solve_batched(demands, capacities, weights, level_gamma, *,
                            x0=None, max_rounds: int = 256, tol: float = 1e-6,
                            placement: str = "level", fill: str = "event",
-                           round: str = "gauss"):
+                           round: str = "gauss", layout: str = "dense",
+                           buckets=None):
     """Solve B independent baseline fills in one jitted vmap call.
 
     Shapes as ``psdsf_solve_batched``: demands (B, N, R), capacities
     (B, K, R), weights (B, N), level_gamma (B, N, K), optional x0 (B, N, K).
     Pad heterogeneous problems with ``psdsf_jax.batch_problems`` (padding is
     inert: padded users carry level rate 0, padded servers zero capacity).
-    ``placement``/``fill``/``round`` as in ``baseline_solve_jax``
-    (``"lexmm"`` rejected: the flow certificates solve host-side).
+    ``placement``/``fill``/``round``/``layout`` as in ``baseline_solve_jax``
+    (``"lexmm"`` rejected: the flow certificates solve host-side); bucketed
+    ``buckets`` are per-problem (B, K, Bmax) idx/mask stacks as for
+    ``psdsf_solve_batched``.
     """
     _check_placement(placement)
     _reject_lexmm_traced(placement)
+    _check_buckets(layout, buckets)
+    if placement == "headroom" and layout == "bucketed":
+        raise ValueError("layout='bucketed' needs the per-server sweep; "
+                         "the routed headroom fill is one-shot global — "
+                         "use layout='dense'")
     b, n, k = level_gamma.shape
     dtype = _solve_dtype(demands)
     if x0 is None:
         x0 = jnp.zeros((b, n, k), dtype=dtype)
+
+    if layout == "bucketed":
+        idx, mask = buckets
+
+        def solve_b(d, c, w, lg, x0_, idx_, mask_):
+            return _solve_core_bucketed(d, c, w, lg, x0_, idx_, mask_,
+                                        "rdm", max_rounds, tol,
+                                        scale=_gamma_scale(d, c, lg),
+                                        fill=fill, round_mode=round)
+
+        return jax.vmap(solve_b)(demands, capacities, weights, level_gamma,
+                                 x0.astype(dtype), idx, mask)
 
     def solve(d, c, w, lg, x0_):
         if placement == "headroom":
@@ -236,11 +268,15 @@ def batch_level_rates(problems, mechanism: str, dtype=np.float32):
 def solve_baseline_jax(problem: AllocationProblem, mechanism: str, x0=None,
                        max_rounds: int = 256, tol: float = 1e-6,
                        loose_tol: float = 5e-3, placement: str = "level",
-                       fill: str = "event", round: str = "gauss"
+                       fill: str = "event", round: str = "gauss",
+                       layout: str = "auto"
                        ) -> tuple[Allocation, SolveInfo]:
     """Convenience wrapper with the same container/contract as the numpy
     baseline solvers (``solve_tsf`` & co.); ``fill``/``round`` thread to
-    the shared jitted sweep.
+    the shared jitted sweep and ``layout`` resolves host-side exactly like
+    ``engine.solve`` (bucketed applies to the level sweep only; routed /
+    lexmm placements fall back dense under ``"auto"`` and reject an
+    explicit ``"bucketed"``).
 
     ``placement="lexmm"`` is honored here by running the exact flow router
     host-side (``flowrouter.lexmm_route``) — an LP certificate has no XLA
@@ -248,10 +284,30 @@ def solve_baseline_jax(problem: AllocationProblem, mechanism: str, x0=None,
     jitted sweep to accelerate.
     """
     from .gamma import gamma_matrix
+    from .layout import BucketedLayout, resolve_layout
     from .placement import fill_iter_budget
 
     g = gamma_matrix(problem)    # computed once: level rates AND scale
     lg = level_rate_matrix(problem, mechanism, gamma=g)
+    swept_placement = placement not in ("headroom", "lexmm")
+    if not swept_placement:
+        if layout == "bucketed":
+            raise ValueError(
+                f"layout='bucketed' needs the per-server sweep; placement "
+                f"{placement!r} is a one-shot routed fill — use "
+                f"layout='dense'")
+        resolved = "dense"
+        buckets = None
+        bucket_max = 0
+    else:
+        resolved = resolve_layout(layout, support=lg)
+        buckets = None
+        bucket_max = 0
+        if resolved == "bucketed":
+            blayout = BucketedLayout.from_support(lg > 0)
+            buckets = (jnp.asarray(blayout.indices),
+                       jnp.asarray(blayout.mask))
+            bucket_max = blayout.bucket_max
     if placement == "lexmm":
         from .flowrouter import lexmm_route
 
@@ -265,7 +321,8 @@ def solve_baseline_jax(problem: AllocationProblem, mechanism: str, x0=None,
         jnp.asarray(problem.demands), jnp.asarray(problem.capacities),
         jnp.asarray(problem.weights), jnp.asarray(lg),
         x0=None if x0 is None else jnp.asarray(x0), max_rounds=max_rounds,
-        tol=tol, placement=placement, fill=fill, round=round)
+        tol=tol, placement=placement, fill=fill, round=round,
+        layout=resolved, buckets=buckets)
     x = np.asarray(x, dtype=np.float64)
     swept = placement != "headroom"          # routed fill: no per-server fill
     return (Allocation(problem, x),
@@ -280,4 +337,5 @@ def solve_baseline_jax(problem: AllocationProblem, mechanism: str, x0=None,
                                                 * fill_iter_budget(
                                                     problem.num_resources,
                                                     "rdm", fill)
-                                                if swept else 0)))
+                                                if swept else 0),
+                                    layout=resolved, bucket_max=bucket_max))

@@ -71,6 +71,53 @@ def _tick_jax_fn():
     return tick
 
 
+@functools.lru_cache(maxsize=1)
+def _tick_jax_bucketed_fn():
+    """Bucketed twin of ``_tick_jax_fn``: each server's fill runs on its
+    pre-gathered (Bmax,)-shaped eligibility bucket and external floors are
+    maintained by O(Bmax) scatter-adds — O(nnz) per full tick instead of
+    O(N*K). The dense state round-trips through the bucket gather/scatter
+    (exact: allocations live only on the support)."""
+    import jax
+    import jax.numpy as jnp
+
+    from .psdsf_jax import (_fill_one_server_rdm, _fill_one_server_rdm_bisect,
+                            _fill_one_server_tdm, _fill_one_server_tdm_bisect)
+
+    @functools.partial(jax.jit, static_argnames=("mode", "fill"))
+    def tick(x, dem_b, capacities, phi_b, gam_b, idx, mask, active,
+             servers, *, mode, fill="event"):
+        k = idx.shape[0]
+        cols = jnp.broadcast_to(jnp.arange(k, dtype=idx.dtype)[:, None],
+                                idx.shape)
+        xb = jnp.where(mask, x[idx, cols], 0.0)
+        xsum = jnp.zeros(x.shape[0], x.dtype).at[idx.ravel()].add(xb.ravel())
+
+        def body(j, carry):
+            xb, xsum = carry
+            i = servers[j]
+            u = idx[i]
+            gi = jnp.where(active[u] & mask[i], gam_b[i], 0.0)
+            x_ext = xsum[u] - xb[i]
+            if mode == "rdm":
+                f = (_fill_one_server_rdm_bisect if fill == "bisect"
+                     else _fill_one_server_rdm)
+                xi = f(capacities[i], dem_b[i], phi_b[i], gi, x_ext)
+            else:
+                f = (_fill_one_server_tdm_bisect if fill == "bisect"
+                     else _fill_one_server_tdm)
+                xi = f(dem_b[i], phi_b[i], gi, x_ext)
+            xi = jnp.where(mask[i], xi, 0.0)
+            return xb.at[i].set(xi), xsum.at[u].add(xi - xb[i])
+
+        xb, _ = jax.lax.fori_loop(0, servers.shape[0], body, (xb, xsum))
+        # scatter-ADD (see psdsf_jax._solve_core_bucketed): masked slots
+        # contribute exact zeros even where padding replicates a user id
+        return jnp.zeros_like(x).at[idx, cols].add(jnp.where(mask, xb, 0.0))
+
+    return tick
+
+
 def min_vds_guarded(x: np.ndarray, weights: np.ndarray, gamma: np.ndarray,
                     active: np.ndarray, *, interpret: bool = True):
     """The Eq. 16 reduction with the inactive/zero-weight mask applied
@@ -103,12 +150,21 @@ class DistributedPSDSF:
     ``"event"`` (argsort + saturation-event scan) or ``"bisect"`` (the
     sort-free monotone-bisection engine — identical fixed point, see
     ``placement.server_fill_rdm_bisect``).
+
+    ``layout`` selects the sweep's data layout on both backends:
+    ``"dense"`` fills every server against all N users, ``"bucketed"``
+    pre-gathers each server's eligibility bucket (``core.layout``) so a
+    tick costs O(nnz) instead of O(N*K) — identical allocations (users
+    outside a bucket have gamma 0 and always fill to zero); ``"auto"``
+    (default) picks by support density. Resolved layout and bucket size
+    are exposed as ``self.layout`` / ``self.bucket_max``.
     """
 
     def __init__(self, problem: AllocationProblem, mode: str = "rdm",
                  seed: int = 0, engine: str = "numpy",
                  precision: str = "highest", placement: str = "level",
-                 fill: str = "event"):
+                 fill: str = "event", layout: str = "auto"):
+        from .layout import BucketedLayout, resolve_layout
         from .placement import FILL_ENGINES, get_placement
 
         if mode not in ("rdm", "tdm"):
@@ -126,12 +182,23 @@ class DistributedPSDSF:
         self.fill = fill
         self.placement = placement
         self.gamma = gamma_matrix(problem)
+        self.layout = resolve_layout(layout, support=self.gamma)
         self.x = np.zeros((problem.num_users, problem.num_servers))
         self.active = np.ones(problem.num_users, dtype=bool)
         self._rng = np.random.default_rng(seed)
         self._router = None          # persistent lexmm router (comparator)
         self._router_mech: Optional[str] = None
         self.router_stats = None     # RouterStats of the last routed call
+        self._blayout = None
+        if self.layout == "bucketed":
+            self._blayout = BucketedLayout.from_support(self.gamma > 0)
+            self._buckets = self._blayout.bucket_lists()
+            self._dem_b = [problem.demands[u] for u in self._buckets]
+            self._phi_b = [problem.weights[u] for u in self._buckets]
+            self._gam_b = [self.gamma[u, i]
+                           for i, u in enumerate(self._buckets)]
+        self.bucket_max = (0 if self._blayout is None
+                           else self._blayout.bucket_max)
         if engine == "jax":
             import jax.numpy as jnp
             # "highest" ticks in f64 (bit-comparable to the numpy oracle even
@@ -144,6 +211,17 @@ class DistributedPSDSF:
                 self._caps = jnp.asarray(problem.capacities, dt)
                 self._weights = jnp.asarray(problem.weights, dt)
                 self._gamma = jnp.asarray(self.gamma, dt)
+                if self._blayout is not None:
+                    bl = self._blayout
+                    self._tick_jax_b = _tick_jax_bucketed_fn()
+                    self._idx_j = jnp.asarray(bl.indices)
+                    self._mask_j = jnp.asarray(bl.mask)
+                    self._dem_bj = self._demands[self._idx_j]
+                    self._phi_bj = self._weights[self._idx_j]
+                    self._gam_bj = jnp.asarray(np.where(
+                        bl.mask,
+                        np.take_along_axis(self.gamma.T, bl.indices, axis=1),
+                        0.0), dt)
 
     def _precision_scope(self):
         import contextlib
@@ -178,6 +256,26 @@ class DistributedPSDSF:
         # one O(NK) reduction per tick, O(N) updates per server after that.
         bisect = self.fill == "bisect"
         xsum = self.x.sum(axis=1)
+        if self._blayout is not None:
+            # bucketed: each server fills its pre-gathered eligibility
+            # bucket only — O(bucket) per server, O(nnz) per full tick
+            for i in idx:
+                u = self._buckets[i]
+                if u.size == 0:
+                    continue
+                gamma_i = np.where(self.active[u], self._gam_b[i], 0.0)
+                x_ext = xsum[u] - self.x[u, i]
+                if self.mode == "rdm":
+                    f = server_fill_rdm_bisect if bisect else server_fill_rdm
+                    xi = f(p.capacities[i], self._dem_b[i], self._phi_b[i],
+                           gamma_i, x_ext)
+                else:
+                    f = server_fill_tdm_bisect if bisect else server_fill_tdm
+                    xi = f(self._dem_b[i], self._phi_b[i], gamma_i, x_ext)
+                xsum[u] += xi - self.x[u, i]
+                self.x[u, i] = xi
+            self._repack_if_routed()
+            return
         for i in idx:
             gamma_i = np.where(self.active, self.gamma[:, i], 0.0)
             x_ext = xsum - self.x[:, i]
@@ -205,11 +303,18 @@ class DistributedPSDSF:
     def _tick_with_jax(self, servers: np.ndarray) -> None:
         import jax.numpy as jnp
         with self._precision_scope():
-            x = self._tick_jax(
-                jnp.asarray(self.x, self._demands.dtype), self._demands,
-                self._caps, self._weights, self._gamma,
-                jnp.asarray(self.active), jnp.asarray(servers),
-                mode=self.mode, fill=self.fill)
+            if self._blayout is not None:
+                x = self._tick_jax_b(
+                    jnp.asarray(self.x, self._demands.dtype), self._dem_bj,
+                    self._caps, self._phi_bj, self._gam_bj, self._idx_j,
+                    self._mask_j, jnp.asarray(self.active),
+                    jnp.asarray(servers), mode=self.mode, fill=self.fill)
+            else:
+                x = self._tick_jax(
+                    jnp.asarray(self.x, self._demands.dtype), self._demands,
+                    self._caps, self._weights, self._gamma,
+                    jnp.asarray(self.active), jnp.asarray(servers),
+                    mode=self.mode, fill=self.fill)
             x.block_until_ready()
         self.x = np.array(x, dtype=np.float64)   # copy: keep self.x writable
 

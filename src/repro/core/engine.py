@@ -155,6 +155,11 @@ def _reject_placement(kw: dict, mechanism: str) -> None:
             f"mechanism {mechanism!r} is closed-form and runs no per-server "
             f"fill; only fill='event', round='gauss' are accepted, got "
             f"fill={fill!r}, round={rnd!r}")
+    layout = kw.pop("layout", "auto")
+    if layout == "bucketed":
+        raise ValueError(
+            f"mechanism {mechanism!r} is closed-form and runs no sweep to "
+            f"bucket; only layout='dense'/'auto' are accepted")
 
 
 def solve(problem: AllocationProblem, mechanism: str = "psdsf-rdm",
@@ -209,23 +214,34 @@ def solve(problem: AllocationProblem, mechanism: str = "psdsf-rdm",
 def _solve_psdsf_via_jax(problem: AllocationProblem, mechanism: str, x0=None,
                          max_rounds: int = 256, tol: float = 1e-6,
                          loose_tol: float = 5e-3, placement: str = "level",
-                         fill: str = "event", round: str = "gauss"
+                         fill: str = "event", round: str = "gauss",
+                         layout: str = "auto"
                          ) -> Tuple[Allocation, SolveInfo]:
     import jax.numpy as jnp
     import numpy as np
 
     from .gamma import gamma_matrix
+    from .layout import BucketedLayout, resolve_layout
     from .placement import fill_iter_budget
     from .psdsf_jax import psdsf_solve_jax
 
     g = gamma_matrix(problem)
     mode = "rdm" if mechanism == "psdsf-rdm" else "tdm"
+    # "auto" resolves host-side (the jitted entries take a concrete
+    # layout name + pre-built buckets; density inspection can't trace)
+    resolved = resolve_layout(layout, support=g)
+    buckets = None
+    bucket_max = 0
+    if resolved == "bucketed":
+        blayout = BucketedLayout.from_support(g > 0)
+        buckets = (jnp.asarray(blayout.indices), jnp.asarray(blayout.mask))
+        bucket_max = blayout.bucket_max
     x, rounds, resid = psdsf_solve_jax(
         jnp.asarray(problem.demands), jnp.asarray(problem.capacities),
         jnp.asarray(problem.weights), jnp.asarray(g),
         x0=None if x0 is None else jnp.asarray(x0),
         mode=mode, max_rounds=max_rounds, tol=tol, placement=placement,
-        fill=fill, round=round)
+        fill=fill, round=round, layout=resolved, buckets=buckets)
     x = np.asarray(x, dtype=np.float64)
     return (Allocation(problem, x),
             SolveInfo.from_residual(int(rounds), float(resid),
@@ -237,4 +253,5 @@ def _solve_psdsf_via_jax(problem: AllocationProblem, mechanism: str, x0=None,
                                     fill_iters=int(rounds) *
                                     problem.num_servers *
                                     fill_iter_budget(problem.num_resources,
-                                                     mode, fill)))
+                                                     mode, fill),
+                                    layout=resolved, bucket_max=bucket_max))

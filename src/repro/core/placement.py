@@ -69,6 +69,7 @@ from typing import Callable, Dict, Optional, Tuple
 import numpy as np
 
 from .gamma import gamma_matrix
+from .layout import BucketedLayout, resolve_layout
 from .types import Allocation, AllocationProblem
 
 _TOL = 1e-9
@@ -125,6 +126,9 @@ class SolveInfo:
     router_mode: str = ""    # "warm" / "verify" / "incremental" / "fallback"
     fill_engine: str = "event"  # per-server fill engine ("" if none ran)
     fill_iters: int = 0      # inner fill iterations (events / bisect steps)
+    layout: str = "dense"    # solve layout ("dense" / "bucketed")
+    bucket_max: int = 0      # padded bucket width Bmax (bucketed only)
+    servers_skipped: int = 0  # active-set sweep skips (bucketed numpy only)
 
     @classmethod
     def from_residual(cls, rounds: int, residual: float, scale: float,
@@ -132,7 +136,8 @@ class SolveInfo:
                       placement: str = "level",
                       stranded_frac: float = float("nan"),
                       fill_engine: str = "event",
-                      fill_iters: int = 0) -> "SolveInfo":
+                      fill_iters: int = 0, layout: str = "dense",
+                      bucket_max: int = 0) -> "SolveInfo":
         """The acceptance contract applied to a raw (rounds, residual) pair
         — the single place the tight/loose bands are derived, shared by the
         jitted solver wrappers so the psdsf and baseline paths cannot
@@ -142,7 +147,8 @@ class SolveInfo:
         approx = not converged and residual <= loose_tol * scale
         return cls(rounds, converged or approx, residual, approx=approx,
                    placement=placement, stranded_frac=stranded_frac,
-                   fill_engine=fill_engine, fill_iters=fill_iters)
+                   fill_engine=fill_engine, fill_iters=fill_iters,
+                   layout=layout, bucket_max=bucket_max)
 
 
 # ---------------------------------------------------------------------------
@@ -217,11 +223,24 @@ def demandable_mask(problem: AllocationProblem,
     """(K, R) bool: capacity that some eligible user could in principle
     consume — cap[i, r] > 0 and some user with gamma[n, i] > 0 demands r.
     Capacity outside the mask (no demand, or an empty server) is not
-    *stranded*, just unprovisioned for this tenant mix."""
+    *stranded*, just unprovisioned for this tenant mix.
+
+    The mask depends only on supports, and every caller passes either the
+    problem's own gamma or a level-rate matrix whose support coincides with
+    it (see ``solve_with_placement``) — so it is computed once per problem
+    and cached on the (frozen) instance, the same way
+    ``AllocationProblem.__post_init__`` stamps derived arrays. Placement
+    comparisons call this inside every repack pass; the rebuild was the
+    dominant cost of ``stranded_fraction`` on large instances."""
+    cached = getattr(problem, "_demandable_mask", None)
+    if cached is not None:
+        return cached
     g = gamma_matrix(problem) if gamma is None else gamma
     # (K, R): does any eligible-on-i user demand r?
     wanted = (g.T > 0).astype(float) @ (problem.demands > 0)
-    return (problem.capacities > 0) & (wanted > 0)
+    mask = (problem.capacities > 0) & (wanted > 0)
+    object.__setattr__(problem, "_demandable_mask", mask)
+    return mask
 
 
 def stranded_fraction(problem: AllocationProblem, x: np.ndarray,
@@ -575,6 +594,127 @@ def sweep_fixed_point(
     return x, SolveInfo(max_rounds, approx, resid, approx=approx)
 
 
+def sweep_fixed_point_bucketed(
+    fill_server,             # (i, x_ext_b) -> x_i_b over bucket i's users
+    layout: BucketedLayout,
+    scale: float,
+    x0: Optional[np.ndarray] = None,
+    max_rounds: int = 600,
+    tol: float = 1e-8,
+    loose_tol: float = 5e-3,
+    adaptive_damping: bool = True,
+    server_order: str = "fixed",
+    seed: int = 0,
+) -> tuple[np.ndarray, SolveInfo]:
+    """Bucketed + active-set twin of :func:`sweep_fixed_point`.
+
+    Same Gauss-Seidel rebuild map, two sparse-eligibility optimizations:
+
+    * **Bucketed fills** — ``fill_server`` receives and returns only bucket
+      i's rows (see ``make_server_fill(..., layout=...)``), and the user
+      row sums feeding each fill's external floors are maintained
+      incrementally by scatter-adding each fill's delta, so per-round cost
+      is O(nnz * R) instead of O(N * K * R).
+    * **Active-set skips** — a server is refilled only while *dirty*:
+      marked when any user it shares changed allocation since its last
+      visit (the ripple set from ``layout.servers_of``). An undamped
+      refill leaves the server at its own best response, so it is marked
+      clean afterward. Skipping happens only while alpha == 1: there a
+      clean server's refill is an exact no-op, whereas a damped refill
+      ((1-a)x + a*rebuild(x)) perturbs even a converged server by ulps
+      in the dense sweep, so once damping engages every server is
+      visited every round to keep the trajectories identical.
+
+    Exactness contract (mirrors ``psdsf_resolve_batched``'s restricted +
+    verify discipline): convergence is **only** accepted on a round that
+    visited every server — either naturally (all dirty: any cold solve's
+    early rounds, making them identical to the dense sweep) or as a forced
+    full verification round, triggered whenever the active set drains,
+    a partial round's residual dips under tolerance, or the round budget
+    runs out. The reported residual is therefore always a full-sweep
+    residual and ``ensure_converged`` behaves exactly as on the dense
+    path — the skips buy speed, never exactness.
+    """
+    n, k = layout.num_users, layout.num_servers
+    buckets = layout.bucket_lists()
+    scale = max(1.0, scale)
+    # ragged per-server allocations: only bucket users can hold tasks, so
+    # any out-of-support mass in x0 is dropped (the dense sweep zeroes it
+    # on each server's first visit; same fixed point)
+    if x0 is None:
+        xb = [np.zeros(u.size) for u in buckets]
+    else:
+        x0 = np.asarray(x0, dtype=np.float64)
+        xb = [x0[u, i] for i, u in enumerate(buckets)]
+    xsum = np.zeros(n)
+    for i, u in enumerate(buckets):
+        xsum[u] += xb[i]
+    resid = np.inf
+    prev_resid = np.inf
+    alpha = 1.0
+    rng = np.random.default_rng(seed) if server_order == "random" else None
+    dirty = np.ones(k, dtype=bool)
+    want_verify = False
+    skipped = 0
+    info = None
+    for rounds in range(1, max_rounds + 1):
+        force_full = (want_verify or not dirty.any()
+                      or rounds == max_rounds)
+        visited_all = True
+        resid = 0.0
+        for i in sweep_server_order(rounds, k, server_order, rng):
+            # skips are confined to undamped rounds: at alpha == 1 a clean
+            # server's refill is provably an exact no-op, but a DAMPED
+            # refill ((1-a)x + a*x) differs from x by ulps in the dense
+            # sweep, so skipping it would let the two trajectories drift
+            if alpha >= 1.0 and not (force_full or dirty[i]):
+                visited_all = False
+                skipped += 1
+                continue
+            u = buckets[i]
+            if u.size == 0:
+                dirty[i] = False
+                continue
+            x_ext = xsum[u] - xb[i]
+            f = fill_server(i, x_ext)
+            # alpha == 1 shortcut is bitwise-identical to the dense
+            # formula ((1-1)*x + 1*f == f for finite x) and makes a
+            # no-change refill produce an EXACT zero delta, which is what
+            # lets warm/churn re-solves leave untouched servers clean
+            xi = f if alpha >= 1.0 else (1.0 - alpha) * xb[i] + alpha * f
+            delta = xi - xb[i]
+            ch = np.nonzero(delta)[0]
+            if ch.size:
+                resid = max(resid, float(np.abs(delta[ch]).max()))
+                xsum[u[ch]] += delta[ch]
+                xb[i] = xi
+                dirty[np.unique(layout.servers_of(u[ch]))] = True
+            if alpha >= 1.0:
+                dirty[i] = False
+        if visited_all and resid <= tol * scale:
+            info = SolveInfo(rounds, True, resid)
+            break
+        # a sub-tolerance partial round is only a CANDIDATE fixed point —
+        # force the next round full so acceptance always verifies
+        want_verify = resid <= tol * scale
+        if (adaptive_damping and rounds >= 8
+                and resid > 0.98 * prev_resid and alpha > 0.15):
+            alpha *= 0.7
+        prev_resid = resid
+    if info is None:
+        # the final round was forced full, so this residual is a
+        # full-sweep residual exactly like the dense exhaustion path
+        approx = resid <= loose_tol * scale
+        info = SolveInfo(max_rounds, approx, resid, approx=approx)
+    info.layout = "bucketed"
+    info.bucket_max = layout.bucket_max
+    info.servers_skipped = skipped
+    x = np.zeros((n, k))
+    for i, u in enumerate(buckets):
+        x[u, i] = xb[i]
+    return x, info
+
+
 # ---------------------------------------------------------------------------
 # Routed global fill: headroom/bestfit for the global-share mechanisms
 # ---------------------------------------------------------------------------
@@ -810,7 +950,8 @@ def fill_iter_budget(num_resources: int, mode: str, fill: str) -> int:
 
 
 def make_server_fill(problem: AllocationProblem, level_gamma: np.ndarray,
-                     mode: str = "rdm", fill: str = "event") -> Callable:
+                     mode: str = "rdm", fill: str = "event",
+                     layout: Optional[BucketedLayout] = None) -> Callable:
     """The per-server rebuild closure for a (mechanism, regime) pair.
 
     ``fill`` selects the engine: ``"event"`` (argsort + saturation-event
@@ -818,10 +959,40 @@ def make_server_fill(problem: AllocationProblem, level_gamma: np.ndarray,
     bisection — same fixed point to ~1e-14; see ``server_fill_rdm_bisect``).
     The closure counts its invocations on ``fill.calls`` so callers can
     report ``fill_iters`` without touching the fill signatures.
+
+    With a ``layout``, the closure is *bucket-shaped*: it takes and returns
+    only bucket i's rows (``layout.bucket_users(i)``), closing over
+    pre-gathered per-bucket demand/weight/gamma rows so each call touches
+    O(|bucket| * R) data — the per-fill half of the bucketed sweep's
+    O(nnz) story. The fill functions themselves are shape-generic, so the
+    engines need no sparse variants.
     """
     if fill not in FILL_ENGINES:
         raise ValueError(f"fill must be one of {FILL_ENGINES}: {fill!r}")
     bisect = fill == "bisect"
+    if layout is not None:
+        buckets = layout.bucket_lists()
+        dem_b = [problem.demands[u] for u in buckets]
+        phi_b = [problem.weights[u] for u in buckets]
+        gam_b = [np.asarray(level_gamma)[u, i]
+                 for i, u in enumerate(buckets)]
+        if mode == "rdm":
+            rdm = server_fill_rdm_bisect if bisect else server_fill_rdm
+
+            def fill_fn(i, x_ext_b):
+                fill_fn.calls += 1
+                return rdm(problem.capacities[i], dem_b[i], phi_b[i],
+                           gam_b[i], x_ext_b)
+        elif mode == "tdm":
+            tdm = server_fill_tdm_bisect if bisect else server_fill_tdm
+
+            def fill_fn(i, x_ext_b):
+                fill_fn.calls += 1
+                return tdm(dem_b[i], phi_b[i], gam_b[i], x_ext_b)
+        else:
+            raise ValueError(f"mode must be 'rdm' or 'tdm': {mode!r}")
+        fill_fn.calls = 0
+        return fill_fn
     if mode == "rdm":
         rdm = server_fill_rdm_bisect if bisect else server_fill_rdm
 
@@ -858,6 +1029,7 @@ def solve_with_placement(
     server_order: str = "fixed",
     seed: int = 0,
     fill: str = "event",
+    layout: str = "auto",
 ) -> tuple[Allocation, SolveInfo]:
     """Solve one mechanism under one placement strategy.
 
@@ -870,27 +1042,59 @@ def solve_with_placement(
     ``lexmm`` flow router (see module docstring). ``fill`` selects the
     per-server fill engine (``"event"``/``"bisect"``, see
     ``make_server_fill``) wherever the sweep runs; the one-shot routed
-    strategies have no per-server fill and record ``fill_engine=""``. The
-    returned ``SolveInfo`` records the strategy, the fill engine and
-    inner-iteration count, and the stranded-capacity fraction.
+    strategies have no per-server fill and record ``fill_engine=""``.
+    ``layout`` selects the sweep's data layout: ``"bucketed"`` runs the
+    O(nnz) active-set sweep (``sweep_fixed_point_bucketed``), ``"auto"``
+    (default) picks it by eligibility density (``resolve_layout``); the
+    routed one-shot strategies have no sweep to bucket, so they run dense
+    (an explicit ``"bucketed"`` there raises). The repack passes of
+    ``headroom``/``bestfit`` stay dense — they are dominated by the dense
+    repack/stranded reductions, not the re-sweep. The returned
+    ``SolveInfo`` records the strategy, the fill engine and
+    inner-iteration count, the layout, and the stranded-capacity fraction.
     """
     get_placement(placement)                       # validate early
+    level_gamma = np.asarray(level_gamma)
+    resolved = resolve_layout(layout, support=level_gamma)
+    sweeps = placement == "level" or per_server_rates
+    if resolved == "bucketed" and not sweeps:
+        if layout == "bucketed":
+            raise ValueError(
+                "layout='bucketed' needs the per-server sweep; routed "
+                f"placement {placement!r} for the global-share mechanisms "
+                "is a one-shot global fill — use layout='dense'/'auto'")
+        resolved = "dense"
     if scale is None:
         scale = gamma_matrix(problem).max(initial=1.0)
     sweep_kw = dict(max_rounds=max_rounds, tol=tol, loose_tol=loose_tol,
                     adaptive_damping=adaptive_damping,
                     server_order=server_order, seed=seed)
     fill_fn = make_server_fill(problem, level_gamma, mode, fill=fill)
-    if placement == "level" or per_server_rates:
-        x, info = sweep_fixed_point(fill_fn, problem.num_users,
-                                    problem.num_servers, scale, x0=x0,
-                                    **sweep_kw)
+    if sweeps:
+        bucket_calls = 0
+        if resolved == "bucketed":
+            blayout = BucketedLayout.from_support(level_gamma > 0)
+            bfill = make_server_fill(problem, level_gamma, mode, fill=fill,
+                                     layout=blayout)
+            x, info = sweep_fixed_point_bucketed(bfill, blayout, scale,
+                                                 x0=x0, **sweep_kw)
+            bucket_calls = bfill.calls
+        else:
+            x, info = sweep_fixed_point(fill_fn, problem.num_users,
+                                        problem.num_servers, scale, x0=x0,
+                                        **sweep_kw)
         if placement in ("headroom", "bestfit"):
+            sweep_info = info
             x, info = repack_refill(
                 problem, level_gamma, fill_fn, x, info, scale, mode=mode,
                 greedy=placement == "bestfit", **sweep_kw)
+            # repack re-sweeps are dense; keep the main sweep's layout
+            # metadata (the knob the caller asked about)
+            info.layout = sweep_info.layout
+            info.bucket_max = sweep_info.bucket_max
+            info.servers_skipped = sweep_info.servers_skipped
         info.fill_engine = fill
-        info.fill_iters = fill_fn.calls * fill_iter_budget(
+        info.fill_iters = (fill_fn.calls + bucket_calls) * fill_iter_budget(
             problem.num_resources, mode, fill)
         # placement == "lexmm" with per-server rates: the per-server fill
         # is already the per-server lexicographic optimum — identity

@@ -57,18 +57,22 @@ def solve_psdsf_rdm(
     placement: str = "level",
     server_order: str = "fixed",
     fill: str = "event",
+    layout: str = "auto",
 ) -> tuple[Allocation, SolveInfo]:
     """PS-DSF under RDM: sweep servers until fixed point of the rebuild map
     (see ``placement.sweep_fixed_point`` for the damping/acceptance
-    contract, ``placement.solve_with_placement`` for the strategies, and
+    contract, ``placement.solve_with_placement`` for the strategies,
     ``placement.server_fill_rdm_bisect`` for the sort-free ``fill="bisect"``
-    engine — identical fixed point, parity-gated in tests)."""
+    engine, and ``placement.sweep_fixed_point_bucketed`` for the
+    ``layout="bucketed"`` O(nnz) active-set sweep ``layout="auto"``
+    resolves to by density — identical fixed points, parity-gated in
+    tests)."""
     g = gamma_matrix(problem)
     return solve_with_placement(
         problem, g, placement=placement, mode="rdm", per_server_rates=True,
         scale=g.max(initial=1.0), x0=x0, max_rounds=max_rounds, tol=tol,
         loose_tol=loose_tol, adaptive_damping=adaptive_damping,
-        server_order=server_order, fill=fill)
+        server_order=server_order, fill=fill, layout=layout)
 
 
 def solve_psdsf_tdm(
@@ -81,6 +85,7 @@ def solve_psdsf_tdm(
     placement: str = "level",
     server_order: str = "fixed",
     fill: str = "event",
+    layout: str = "auto",
 ) -> tuple[Allocation, SolveInfo]:
     """PS-DSF under TDM (Def. 4 feasibility). Same adaptive damping,
     approximate-convergence contract and ``fill=`` engine axis as the RDM
@@ -90,7 +95,7 @@ def solve_psdsf_tdm(
         problem, g, placement=placement, mode="tdm", per_server_rates=True,
         scale=g.max(initial=1.0), x0=x0, max_rounds=max_rounds, tol=tol,
         loose_tol=loose_tol, adaptive_damping=adaptive_damping,
-        server_order=server_order, fill=fill)
+        server_order=server_order, fill=fill, layout=layout)
 
 
 # ---------------------------------------------------------------------------

@@ -361,6 +361,117 @@ def _solve_core(demands, capacities, weights, gamma, x0, mode, max_rounds,
     return x, rounds, resid
 
 
+def _solve_core_bucketed(demands, capacities, weights, gamma, x0, idx, mask,
+                         mode, max_rounds, tol, servers=None, alpha0=1.0,
+                         scale=None, fill="event", round_mode="gauss"):
+    """Bucketed twin of ``_solve_core`` for sparse eligibility.
+
+    ``idx``/``mask`` are a ``layout.BucketedLayout``'s padded (K, Bmax)
+    per-server user buckets (built host-side — the bucket build argsorts a
+    data-dependent support, so it cannot live in the trace). The whole
+    solve runs on gathered (K, Bmax[, R]) bucket arrays: each server's fill
+    sees only its bucket's rows, and the per-user row sums feeding the
+    external floors are maintained by O(Bmax) scatter-adds of each fill's
+    delta (each bucket row holds distinct user ids, so the adds never
+    collide within a server). The dense core's per-server
+    ``x.sum(axis=1)`` is O(N*K) *per server*; here a round costs O(nnz*R)
+    — the asymptotic win the ``sparse_scale`` benchmark gates.
+
+    Padding discipline (same trick as ``batch_problems``): padded slots
+    carry gamma 0, so fills return 0 for them and their deltas are exact
+    zeros — padding is inert in fills, row sums, and the residual. Row
+    sums are re-derived from the buckets at every round start, mirroring
+    the dense sweep's one-reduction-per-round robustness.
+
+    ``servers``/``alpha0``/``scale``/``fill``/``round_mode`` as in
+    ``_solve_core``; fixed points are identical (parity-gated at 1e-9 by
+    tests/test_layout.py). Returns (x dense (N, K), rounds, residual).
+    """
+    scale = jnp.maximum(1.0, gamma.max() if scale is None else scale)
+    n, k = gamma.shape
+    dt = x0.dtype
+    sweep = jnp.arange(k, dtype=jnp.int32) if servers is None else servers
+    if fill not in ("event", "bisect"):
+        raise ValueError(f"fill must be 'event' or 'bisect': {fill!r}")
+    if round_mode not in ("gauss", "jacobi"):
+        raise ValueError(
+            f"round must be 'gauss' or 'jacobi': {round_mode!r}")
+
+    gam_b = jnp.where(mask, jnp.take_along_axis(gamma.T, idx, axis=1), 0.0)
+    dem_b = demands[idx]                                   # (K, Bmax, R)
+    phi_b = weights[idx]                                   # (K, Bmax)
+    xb0 = jnp.where(mask, jnp.take_along_axis(x0.T, idx, axis=1), 0.0)
+
+    def fill_server(i, x_ext):
+        if mode == "rdm":
+            f = (_fill_one_server_rdm_bisect if fill == "bisect"
+                 else _fill_one_server_rdm)
+            return f(capacities[i], dem_b[i], phi_b[i], gam_b[i], x_ext)
+        f = (_fill_one_server_tdm_bisect if fill == "bisect"
+             else _fill_one_server_tdm)
+        return f(dem_b[i], phi_b[i], gam_b[i], x_ext)
+
+    def row_sums(xb):
+        return jnp.zeros(n, dt).at[idx.ravel()].add(
+            jnp.where(mask, xb, 0.0).ravel())
+
+    if round_mode == "jacobi":
+        alpha0 = min(alpha0, 0.5)
+        fill_all = jax.vmap(fill_server, in_axes=(0, 0))
+
+        def one_round(xb, alpha):
+            xsum = row_sums(xb)
+            x_ext = xsum[idx[sweep]] - xb[sweep]
+            xi = jnp.where(mask[sweep], fill_all(sweep, x_ext), 0.0)
+            new = (1.0 - alpha) * xb[sweep] + alpha * xi
+            resid = jnp.abs(new - xb[sweep]).max()
+            return xb.at[sweep].set(new), resid
+    else:
+        def one_round(xb, alpha):
+            xsum = row_sums(xb)
+
+            def per_server(j, carry):
+                xb, xsum, resid = carry
+                i = sweep[j]
+                u = idx[i]
+                x_ext = xsum[u] - xb[i]
+                xi = jnp.where(mask[i], fill_server(i, x_ext), 0.0)
+                xi = (1.0 - alpha) * xb[i] + alpha * xi
+                delta = jnp.where(mask[i], xi - xb[i], 0.0)
+                return (xb.at[i].set(jnp.where(mask[i], xi, 0.0)),
+                        xsum.at[u].add(delta),
+                        jnp.maximum(resid, jnp.abs(delta).max()))
+
+            xb, _, resid = jax.lax.fori_loop(
+                0, sweep.shape[0], per_server,
+                (xb, xsum, jnp.asarray(0.0, dt)))
+            return xb, resid
+
+    def cond(carry):
+        _, rounds, _, _, resid = carry
+        return (rounds < max_rounds) & (resid > tol * scale)
+
+    def body(carry):
+        xb, rounds, prev_norm, alpha, _ = carry
+        xb_new, resid = one_round(xb, alpha)
+        # same alpha-normalized stall schedule as the dense core
+        norm = resid / alpha
+        stall = (rounds >= 3) & (norm > 0.9 * prev_norm) & (alpha > 0.01)
+        alpha = jnp.where(stall, alpha * 0.7, alpha)
+        return xb_new, rounds + 1, norm, alpha, resid
+
+    big = jnp.array(jnp.inf, dtype=dt)
+    xb, rounds, _, _, resid = jax.lax.while_loop(
+        cond, body, (xb0, jnp.array(0), big, jnp.array(alpha0, dt), big))
+    cols = jnp.broadcast_to(jnp.arange(k, dtype=idx.dtype)[:, None],
+                            idx.shape)
+    # scatter-ADD, not set: a row's real ids are distinct, but batch-padded
+    # buckets replicate id 0 in the padding, and a colliding .set picks an
+    # unspecified writer — masked padding adds an exact 0.0 instead
+    x = jnp.zeros((n, k), dt).at[idx, cols].add(jnp.where(mask, xb, 0.0))
+    return x, rounds, resid
+
+
 def _solve_dtype(demands):
     return jnp.float64 if demands.dtype == jnp.float64 else jnp.float32
 
@@ -471,13 +582,29 @@ def _check_placement(placement: str) -> None:
                          f"(numpy engine only)")
 
 
+def _check_buckets(layout: str, buckets) -> None:
+    """Trace-time gate for the bucketed layout args: ``layout`` is a static
+    name, ``buckets`` the (idx, mask) arrays of a host-built
+    ``layout.BucketedLayout`` (``"auto"`` has no meaning here — density
+    inspection is host-side; ``engine.solve`` and the schedulers resolve it
+    before calling in)."""
+    if layout not in ("dense", "bucketed"):
+        raise ValueError(
+            f"jitted entry points take layout='dense'|'bucketed' (resolve "
+            f"'auto' host-side, e.g. via layout.resolve_layout): {layout!r}")
+    if layout == "bucketed" and buckets is None:
+        raise ValueError("layout='bucketed' needs buckets=(idx, mask) from "
+                         "a BucketedLayout (host-built)")
+
+
 @functools.partial(jax.jit,
                    static_argnames=("mode", "max_rounds", "placement",
-                                    "fill", "round"))
+                                    "fill", "round", "layout"))
 def psdsf_solve_jax(demands, capacities, weights, gamma, *, x0=None,
                     mode: str = "rdm", max_rounds: int = 256,
                     tol: float = 1e-6, placement: str = "level",
-                    fill: str = "event", round: str = "gauss"):
+                    fill: str = "event", round: str = "gauss",
+                    layout: str = "dense", buckets=None):
     """Solve PS-DSF. Returns (x (N,K), rounds, residual).
 
     ``gamma`` is the (N, K) eligibility-masked monopolization matrix; compute
@@ -503,15 +630,28 @@ def psdsf_solve_jax(demands, capacities, weights, gamma, *, x0=None,
     identity on the level solve (PS-DSF's per-server fill is already the
     per-server lexicographic optimum — see ``flowrouter``); ``"bestfit"``
     is numpy-only and rejected here.
+
+    ``layout="bucketed"`` with ``buckets=(idx, mask)`` (a host-built
+    ``layout.BucketedLayout``'s padded arrays) runs the O(nnz) bucketed
+    sweep ``_solve_core_bucketed`` — same fixed point, gated >= 3x on the
+    pinned sparse instance. The headroom repack stays dense either way.
     """
     _check_placement(placement)
+    _check_buckets(layout, buckets)
     n, k = gamma.shape
     dtype = _solve_dtype(demands)
     if x0 is None:
         x0 = jnp.zeros((n, k), dtype=dtype)
-    out = _solve_core(demands, capacities, weights, gamma,
-                      x0.astype(dtype), mode, max_rounds, tol, fill=fill,
-                      round_mode=round)
+    if layout == "bucketed":
+        idx, mask = buckets
+        out = _solve_core_bucketed(demands, capacities, weights, gamma,
+                                   x0.astype(dtype), idx, mask, mode,
+                                   max_rounds, tol, fill=fill,
+                                   round_mode=round)
+    else:
+        out = _solve_core(demands, capacities, weights, gamma,
+                          x0.astype(dtype), mode, max_rounds, tol, fill=fill,
+                          round_mode=round)
     if placement == "headroom":
         out = _repack_refill_core(demands, capacities, weights, gamma, *out,
                                   mode, max_rounds, tol, fill=fill,
@@ -521,11 +661,12 @@ def psdsf_solve_jax(demands, capacities, weights, gamma, *, x0=None,
 
 @functools.partial(jax.jit,
                    static_argnames=("mode", "max_rounds", "placement",
-                                    "fill", "round"))
+                                    "fill", "round", "layout"))
 def psdsf_solve_batched(demands, capacities, weights, gamma, *, x0=None,
                         mode: str = "rdm", max_rounds: int = 256,
                         tol: float = 1e-6, placement: str = "level",
-                        fill: str = "event", round: str = "gauss"):
+                        fill: str = "event", round: str = "gauss",
+                        layout: str = "dense", buckets=None):
     """Solve B independent PS-DSF problems in one jitted call.
 
     Shapes: demands (B, N, R), capacities (B, K, R), weights (B, N),
@@ -535,13 +676,31 @@ def psdsf_solve_batched(demands, capacities, weights, gamma, *, x0=None,
 
     Pad heterogeneous problems with ``batch_problems``; padding is inert
     (see module docstring). ``placement``/``fill``/``round`` as in
-    ``psdsf_solve_jax``.
+    ``psdsf_solve_jax``. ``layout="bucketed"`` takes per-problem buckets
+    — (B, K, Bmax) idx/mask stacks (pad each problem's layout to a common
+    Bmax with masked slots; padding is inert like the user/server padding).
     """
     _check_placement(placement)
+    _check_buckets(layout, buckets)
     b, n, k = gamma.shape
     dtype = _solve_dtype(demands)
     if x0 is None:
         x0 = jnp.zeros((b, n, k), dtype=dtype)
+
+    if layout == "bucketed":
+        idx, mask = buckets
+
+        def solve_b(d, c, w, g, x0_, idx_, mask_):
+            out = _solve_core_bucketed(d, c, w, g, x0_, idx_, mask_, mode,
+                                       max_rounds, tol, fill=fill,
+                                       round_mode=round)
+            if placement == "headroom":
+                out = _repack_refill_core(d, c, w, g, *out, mode, max_rounds,
+                                          tol, fill=fill, round_mode=round)
+            return out
+
+        return jax.vmap(solve_b)(demands, capacities, weights, gamma,
+                                 x0.astype(dtype), idx, mask)
 
     def solve(d, c, w, g, x0_):
         out = _solve_core(d, c, w, g, x0_, mode, max_rounds, tol, fill=fill,
@@ -557,11 +716,12 @@ def psdsf_solve_batched(demands, capacities, weights, gamma, *, x0=None,
 
 @functools.partial(jax.jit,
                    static_argnames=("mode", "max_rounds", "placement",
-                                    "fill", "round"))
+                                    "fill", "round", "layout"))
 def psdsf_resolve_batched(demands, capacities, weights, gamma, x0, servers, *,
                           mode: str = "rdm", max_rounds: int = 64,
                           tol: float = 1e-4, placement: str = "level",
-                          fill: str = "event", round: str = "gauss"):
+                          fill: str = "event", round: str = "gauss",
+                          layout: str = "dense", buckets=None):
     """Event-driven incremental re-solve of B perturbed problems.
 
     ``servers`` (B, S) int32 lists the servers each scenario's events touch
@@ -579,33 +739,47 @@ def psdsf_resolve_batched(demands, capacities, weights, gamma, x0, servers, *,
     ``placement="headroom"`` appends repack-and-refill passes after the
     verification sweep (full sweeps — the repack is global by nature).
     ``fill``/``round`` select the fill engine and outer iteration for both
-    phases, as in ``psdsf_solve_jax``.
+    phases, as in ``psdsf_solve_jax``; ``layout="bucketed"`` (with
+    (B, K, Bmax) ``buckets``) runs BOTH the restricted and the
+    verification phase on the bucketed core — the restricted+verify
+    exactness contract is layout-independent.
     """
     _check_placement(placement)
+    _check_buckets(layout, buckets)
 
-    def one(d, c, w, g, x0_, srv):
+    def one(d, c, w, g, x0_, srv, *bkt):
+        def core(x_init, servers=None, alpha0=1.0):
+            if layout == "bucketed":
+                return _solve_core_bucketed(
+                    d, c, w, g, x_init, bkt[0], bkt[1], mode, max_rounds,
+                    tol, servers=servers, alpha0=alpha0, fill=fill,
+                    round_mode=round)
+            return _solve_core(d, c, w, g, x_init, mode, max_rounds, tol,
+                               servers=servers, alpha0=alpha0, fill=fill,
+                               round_mode=round)
+
         # The warm start is near the fixed point; alpha0 = 0.3 is enough to
         # absorb a cell-local perturbation in a few sweeps without fully
         # re-exciting the restricted subproblem's limit cycle.
-        x, r_restricted, _ = _solve_core(d, c, w, g, x0_, mode, max_rounds,
-                                         tol, servers=srv, alpha0=0.3,
-                                         fill=fill, round_mode=round)
+        x, r_restricted, _ = core(x0_, servers=srv, alpha0=0.3)
         # Verification starts pre-damped at alpha ~ the level where a cold
         # solve's own schedule accepts (resid ~ alpha * cycle amplitude
         # crosses tol around alpha ~ 0.02 at scheduler tolerance), so
         # incremental and cold solves end with equal-strength certificates;
         # an undamped full sweep here would just re-excite the limit cycle.
-        x, r_full, resid = _solve_core(d, c, w, g, x, mode, max_rounds, tol,
-                                       alpha0=0.02, fill=fill,
-                                       round_mode=round)
+        x, r_full, resid = core(x, alpha0=0.02)
         if placement == "headroom":
             x, r_full, resid = _repack_refill_core(
                 d, c, w, g, x, r_full, resid, mode, max_rounds, tol,
                 fill=fill, round_mode=round)
         return x, r_restricted, r_full, resid
 
-    return jax.vmap(one)(demands, capacities, weights, gamma,
-                         x0.astype(_solve_dtype(demands)), servers)
+    x0c = x0.astype(_solve_dtype(demands))
+    if layout == "bucketed":
+        idx, mask = buckets
+        return jax.vmap(one)(demands, capacities, weights, gamma, x0c,
+                             servers, idx, mask)
+    return jax.vmap(one)(demands, capacities, weights, gamma, x0c, servers)
 
 
 def batch_problems(problems, dtype=np.float32):

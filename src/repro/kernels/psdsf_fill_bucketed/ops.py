@@ -1,0 +1,107 @@
+"""Bucketed whole-cluster fill built on the ``psdsf_fill_bucketed`` kernel.
+
+``fill_cluster_bucketed_padded`` is the bucket-layout Jacobi-round
+primitive: rebuild every server's fill against fixed external usage, with
+all per-server work confined to the server's eligibility bucket
+(``core.layout.BucketedLayout``). Same freeze-and-repeat event loop
+(<= R+1 iterations) and bind rule as the dense
+``psdsf_fill.ops.fill_cluster_padded``; inputs and the returned fill are
+bucket-shaped (K, Bmax), with ``BucketedLayout.scatter`` recovering the
+dense (N, K) matrix when needed.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .kernel import TOL, fill_event_levels_bucketed
+
+
+def fill_cluster_bucketed_padded(cap, dem_b, phi_b, gam_b, x_ext_b, mask, *,
+                                 mode: str = "rdm", interpret: bool = False):
+    """Rebuild all K server fills from bucketed external usage at once.
+
+    cap: (K, R); dem_b: (K, Bmax, R) gathered demand rows; phi_b /
+    gam_b / x_ext_b: (K, Bmax) gathered weights / per-server gammas /
+    external task counts; mask: (K, Bmax) validity of each bucket slot.
+    Returns the (K, Bmax) bucket-shaped fill as numpy (masked slots 0).
+    Pads the bucket and server axes to the kernel's block multiples
+    (padded slots get rate 0 — inert), so callers don't have to know the
+    tiling. ``mode="tdm"`` maps the time-share constraint onto a single
+    virtual resource of capacity 1. Dtype follows ``enable_x64`` exactly
+    like the dense wrapper, as does the bisection-step cap.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.placement import BISECT_STEPS, BISECT_STEPS_F32
+
+    cap = np.asarray(cap)
+    dem_b = np.asarray(dem_b)
+    phi_b = np.asarray(phi_b)
+    gam_b = np.asarray(gam_b)
+    x_ext_b = np.asarray(x_ext_b)
+    mask = np.asarray(mask, dtype=bool)
+    k, bmax = gam_b.shape
+
+    live = mask & (gam_b > 0)
+    if mode == "tdm":
+        rate = np.where(live, phi_b, 0.0)
+        dem = np.ones((k, bmax, 1), cap.dtype)
+        caps = np.ones((k, 1), cap.dtype)
+    elif mode == "rdm":
+        rate = np.where(live, phi_b * gam_b, 0.0)
+        dem = dem_b
+        caps = cap
+    else:
+        raise ValueError(f"mode must be 'rdm' or 'tdm': {mode!r}")
+    # the fill grows x at phi*gamma per unit level whatever the regime;
+    # ``rate`` above is the *usage* slope (for TDM usage is x/gamma = phi*L)
+    full_rate = np.where(live, phi_b * gam_b, 0.0)
+    floor = np.where(live, x_ext_b / np.maximum(full_rate, 1e-300), 0.0)
+
+    block_b, block_k = min(256, max(bmax, 1)), min(128, max(k, 1))
+    b_pad, k_pad = -bmax % block_b, -k % block_k
+    if b_pad or k_pad:
+        rate = np.pad(rate, ((0, k_pad), (0, b_pad)))
+        full_rate = np.pad(full_rate, ((0, k_pad), (0, b_pad)))
+        floor = np.pad(floor, ((0, k_pad), (0, b_pad)))
+        dem = np.pad(dem, ((0, k_pad), (0, b_pad), (0, 0)))
+        caps = np.pad(caps, ((0, k_pad), (0, 0)))
+
+    dt = jnp.float64 if jnp.asarray(0.0).dtype == jnp.float64 else jnp.float32
+    steps = BISECT_STEPS if dt == jnp.float64 else BISECT_STEPS_F32
+    rate = jnp.asarray(rate, dt)
+    full_rate = jnp.asarray(full_rate, dt)
+    floor = jnp.asarray(floor, dt)
+    dem_j = jnp.asarray(dem, dt)
+    caps_j = jnp.asarray(caps, dt)
+    kp, r = caps_j.shape
+    eps = float(jnp.finfo(dt).eps)
+    cap_scale = max(1.0, float(caps_j.max()))
+    level_tol = max(TOL, 32 * eps)
+
+    x = jnp.zeros_like(rate)
+    active = rate > 0
+    saturated = caps_j <= TOL * cap_scale
+    frozen = jnp.zeros((kp, r), dt)
+    level = jnp.zeros((kp,), dt)
+    events = 1 if mode == "tdm" else r + 1
+    for _ in range(events):
+        rate_a = jnp.where(active, rate, 0.0)
+        floors_a = jnp.where(active, floor, 0.0)
+        lvl, u, lsl, slope = fill_event_levels_bucketed(
+            floors_a, rate_a, dem_j, caps_j, frozen, saturated.astype(dt),
+            level, steps=steps, block_b=block_b, block_k=block_k,
+            interpret=interpret)
+        canb = (~saturated) & (slope > TOL)
+        bind = canb & (caps_j - u <= lsl * level_tol + 32 * eps * cap_scale)
+        x = jnp.where(active,
+                      full_rate * jnp.maximum(lvl[:, None] - floor, 0.0), x)
+        # slot (i, b) freezes when its user demands a newly-bound resource
+        newly = active & ((dem_j * bind.astype(dt)[:, None, :]
+                           ).sum(axis=2) > 0)
+        frozen = frozen + (jnp.where(newly, x, 0.0)[:, :, None]
+                           * dem_j).sum(axis=1)
+        saturated = saturated | bind
+        active = active & ~newly
+        level = jnp.maximum(level, lvl)
+    return np.asarray(x)[:k, :bmax]

@@ -1,0 +1,30 @@
+"""Oracle for the bucketed cluster fill: the exact numpy *event* engine
+run server-by-server on each server's gathered bucket
+(``core.placement.server_fill_rdm`` / ``_tdm`` on the bucket rows). The
+Pallas bucketed kernel path must reproduce these fills — same fixed
+point, checked to 1e-9 in the interpret-mode suite."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.placement import server_fill_rdm, server_fill_tdm
+
+
+def fill_cluster_bucketed_ref(cap, dem_b, phi_b, gam_b, x_ext_b, mask, *,
+                              mode: str = "rdm"):
+    """cap: (K, R); dem_b: (K, Bmax, R); phi_b/gam_b/x_ext_b/mask:
+    (K, Bmax) -> (K, Bmax) bucket-shaped fill, one exact event-driven
+    server fill per row (masked slots 0)."""
+    k, bmax = gam_b.shape
+    x = np.zeros((k, bmax))
+    for i in range(k):
+        m = mask[i]
+        if not m.any():
+            continue
+        g_i = np.where(m, gam_b[i], 0.0)
+        if mode == "rdm":
+            x[i] = server_fill_rdm(cap[i], dem_b[i], phi_b[i], g_i,
+                                   x_ext_b[i])
+        else:
+            x[i] = server_fill_tdm(dem_b[i], phi_b[i], g_i, x_ext_b[i])
+    return x

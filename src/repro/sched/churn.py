@@ -67,6 +67,14 @@ class ChurnRecord:
     # fill-engine observability (mirrors SolveInfo.fill_engine/fill_iters):
     fill_engine: str = ""    # "event" / "bisect" ("" if the tick flow-routed)
     fill_iters: int = 0      # inner-iteration budget the re-solve spent
+    # sparse-layout observability (mirrors SolveInfo.layout/bucket_max):
+    layout: str = "dense"    # data layout the re-solve swept in
+    bucket_max: int = 0      # widest eligibility bucket (0 when dense)
+    layout_rebuilds: int = 0  # bucket rebuilds this step (arrivals outside
+    #                           the layout rebuild loudly; departures only
+    #                           mask buckets in place)
+    servers_skipped: int = 0  # active-set skips (numpy sweep only; the
+    #                           jitted resolve always sweeps every server)
 
 
 #: sweep-based mechanisms the simulator can maintain a fixed point for
@@ -99,6 +107,14 @@ class ChurnSimulator:
     per-server fill engine and outer iteration of the jitted sweep (see
     ``psdsf_jax._solve_core``); each record reports them back as
     ``fill_engine``/``fill_iters``.
+
+    ``layout`` ("dense"/"bucketed"/"auto") picks the sweep's data layout
+    (``core.layout``): bucketed sweeps each server's eligibility bucket —
+    O(nnz) per round — with buckets built once from the ACTIVE support at
+    construction. Departures mask bucket slots in place (no rebuild);
+    an arrival the layout never saw rebuilds it loudly (recompile + the
+    per-record ``layout_rebuilds`` flag). "auto" resolves by density of
+    the initial active support.
     """
 
     def __init__(self, problem: AllocationProblem, mode: Optional[str] = None,
@@ -107,9 +123,11 @@ class ChurnSimulator:
                  initial_active: Optional[np.ndarray] = None,
                  telemetry: bool = True, interpret_vds: bool = True,
                  mechanism: Optional[str] = None, placement: str = "level",
-                 fill: str = "event", round: str = "gauss"):
+                 fill: str = "event", round: str = "gauss",
+                 layout: str = "auto"):
         import jax.numpy as jnp
 
+        from repro.core.layout import resolve_layout
         from repro.core.placement import FILL_ENGINES, get_placement
 
         if mode is not None and mechanism is not None:
@@ -154,16 +172,48 @@ class ChurnSimulator:
         self._weights = jnp.asarray(problem.weights, jnp.float32)
         self._elig = jnp.asarray(problem.eligibility, jnp.float32)
         self._resolve = _resolve_fn()
+        # buckets are built from the ACTIVE support at construction time:
+        # departures only mask bucket slots in place, arrivals of users the
+        # layout never saw rebuild it (loudly — counted per record)
+        routed = (placement == "headroom"
+                  and mechanism not in ("psdsf-rdm", "psdsf-tdm"))
+        if routed and layout == "bucketed":
+            raise ValueError(
+                "layout='bucketed' needs the per-server sweep; the routed "
+                "headroom fill for global-share mechanisms is one-shot "
+                "global — use layout='dense'")
+        self.layout = ("dense" if routed else resolve_layout(
+            layout, support=(problem.eligibility > 0)
+            & self.active[:, None]))
+        self._blayout = None
+        self.layout_rebuilds = 0
+        self._needs_rebuild = False
+        if self.layout == "bucketed":
+            self._build_buckets()
         # persistent lexmm router (global-share + placement="lexmm" ticks):
         # built lazily on the BASE capacities; degrade/restore re-scale its
         # rhs in place, arrivals/departures flow in as activity deltas
         self._lexmm_router = None
         self._router_stats = None
 
+    def _build_buckets(self) -> None:
+        import jax.numpy as jnp
+
+        from repro.core.layout import BucketedLayout
+
+        supp = (self.problem.eligibility > 0) & self.active[:, None]
+        self._blayout = BucketedLayout.from_support(supp)
+        self._covered = self.active.copy()     # users the layout has slots for
+        self._idx_j = jnp.asarray(self._blayout.indices)
+        self._mask_j = jnp.asarray(self._blayout.mask)
+        self._needs_rebuild = False
+
     # -- event application --------------------------------------------------
     def _apply(self, ev: ChurnEvent) -> None:
         if ev.kind == "arrival":
             self.active[ev.user] = True
+            if self._blayout is not None and not self._covered[ev.user]:
+                self._needs_rebuild = True
         elif ev.kind == "departure":
             self.active[ev.user] = False
             self.x[ev.user, :] = 0.0
@@ -185,7 +235,9 @@ class ChurnSimulator:
             None if x0 is None else jnp.asarray(x0, jnp.float32),
             mechanism=self.mechanism, max_rounds=self.max_rounds,
             tol=self.tol, placement=self.placement, fill=self.fill,
-            round=self.round)
+            round=self.round, layout=self.layout,
+            buckets=(None if self._blayout is None
+                     else (self._idx_j, self._mask_j)))
         return np.array(x, dtype=np.float64), int(rounds), float(resid)
 
     def _solve_lexmm_host(self) -> tuple[np.ndarray, int, float]:
@@ -225,6 +277,14 @@ class ChurnSimulator:
         """Apply simultaneous events, re-solve, record telemetry."""
         for ev in events:
             self._apply(ev)
+        rebuilds = 0
+        if self._needs_rebuild:
+            # an arrival outside the layout: rebuild from the new active
+            # support (a new Bmax recompiles the jitted sweep — loud by
+            # design, and counted so streams can budget for it)
+            self._build_buckets()
+            self.layout_rebuilds += 1
+            rebuilds = 1
         self._router_stats = None
         t0 = _time.perf_counter()
         x, rounds, resid = self._solve(self.x if self.warm_start else None)
@@ -254,7 +314,11 @@ class ChurnSimulator:
             warm_fallbacks=0 if rs is None else rs.warm_fallbacks,
             router_mode="" if rs is None else rs.mode,
             fill_engine=self.fill if swept else "",
-            fill_iters=budget)
+            fill_iters=budget,
+            layout=self.layout if swept else "dense",
+            bucket_max=(self._blayout.bucket_max if swept
+                        and self._blayout is not None else 0),
+            layout_rebuilds=rebuilds)
 
     def run(self, events: Sequence[ChurnEvent]) -> List[ChurnRecord]:
         """Consume a whole stream: batch same-timestamp events, one re-solve
@@ -305,14 +369,14 @@ def _resolve_fn():
     from repro.core.baselines_jax import (_routed_fill_core,
                                           level_rate_matrix_jnp)
     from repro.core.psdsf_jax import (_repack_refill_core, _solve_core,
-                                      gamma_matrix_jnp)
+                                      _solve_core_bucketed, gamma_matrix_jnp)
 
     @functools.partial(jax.jit, static_argnames=("mechanism", "max_rounds",
                                                  "placement", "fill",
-                                                 "round"))
+                                                 "round", "layout"))
     def resolve(demands, capacities, weights, eligibility, active, cap_scale,
                 x0, *, mechanism, max_rounds, tol, placement="level",
-                fill="event", round="gauss"):
+                fill="event", round="gauss", layout="dense", buckets=None):
         caps_eff = capacities * cap_scale[:, None]
         g = gamma_matrix_jnp(demands, caps_eff, eligibility)
         g = jnp.where(active[:, None], g, 0.0)
@@ -333,6 +397,9 @@ def _resolve_fn():
         if placement == "headroom" and not psdsf:
             # global-share mechanisms route via the one-shot exact fill;
             # there is no fixed point to warm-start
+            if layout == "bucketed":
+                raise ValueError("routed headroom fill has no bucketed "
+                                 "form; guarded in ChurnSimulator.__init__")
             return _routed_fill_core(demands, caps_eff, weights, lg)
         if x0 is None:
             x0 = jnp.zeros(lg.shape, dtype=demands.dtype)
@@ -340,9 +407,19 @@ def _resolve_fn():
         # acceptance band always on the ACTIVE users' per-server gamma scale
         # (the baseline level rates sum gamma over servers — see
         # baselines_jax; and a departed huge-gamma user must not loosen it)
-        out = _solve_core(demands, caps_eff, weights, lg, x0, mode,
-                          max_rounds, tol, scale=g.max(), fill=fill,
-                          round_mode=round)
+        if layout == "bucketed":
+            # departure-only churn masks bucket slots in place: the layout
+            # was built from the active support, so departed users' slots
+            # exist and simply go dark under the activity mask
+            idx, mask = buckets
+            out = _solve_core_bucketed(demands, caps_eff, weights, lg, x0,
+                                       idx, mask & active[idx], mode,
+                                       max_rounds, tol, scale=g.max(),
+                                       fill=fill, round_mode=round)
+        else:
+            out = _solve_core(demands, caps_eff, weights, lg, x0, mode,
+                              max_rounds, tol, scale=g.max(), fill=fill,
+                              round_mode=round)
         if placement == "headroom":
             out = _repack_refill_core(demands, caps_eff, weights, g, *out,
                                       mode, max_rounds, tol, fill=fill,

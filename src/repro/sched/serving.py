@@ -102,9 +102,10 @@ class DynamicDispatcher:
     """Asynchronous per-group PS-DSF ticks for tenant churn (Section III-D /
     the Section V experiment, at the serving layer).
 
-    ``engine``/``precision``/``placement``/``fill`` thread straight
-    through to ``DistributedPSDSF`` (the jitted tick engine, its dtype,
-    the placement strategy, and the per-server fill engine), matching the
+    ``engine``/``precision``/``placement``/``fill``/``layout`` thread
+    straight through to ``DistributedPSDSF`` (the jitted tick engine, its
+    dtype, the placement strategy, the per-server fill engine and the
+    dense/bucketed sweep layout), matching the
     knobs ``ChurnSimulator`` and ``admitted_rates`` already expose — a
     dispatcher ticked to equilibrium reproduces
     ``admitted_rates(..., mechanism="psdsf-<mode>")`` quotas
@@ -114,12 +115,14 @@ class DynamicDispatcher:
     def __init__(self, groups: Sequence[ReplicaGroup],
                  tenants: Sequence[Tenant], mode: str = "rdm",
                  engine: str = "numpy", precision: str = "highest",
-                 placement: str = "level", fill: str = "event"):
+                 placement: str = "level", fill: str = "event",
+                 layout: str = "auto"):
         self.groups = list(groups)
         self.tenants = list(tenants)
         self.sim = DistributedPSDSF(dispatch_problem(groups, tenants), mode,
                                     engine=engine, precision=precision,
-                                    placement=placement, fill=fill)
+                                    placement=placement, fill=fill,
+                                    layout=layout)
 
     def set_active(self, tenant_name: str, active: bool):
         """Tenant arrival/departure by name (delegates to the simulator)."""

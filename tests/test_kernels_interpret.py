@@ -1,8 +1,8 @@
 """Interpret-mode lane for the scheduler Pallas kernels (ISSUE-7 CI
-satellite): ``psdsf_vds``, ``psdsf_fill`` and the ``_compat`` shim, all
-runnable on a CPU-only box (``JAX_PLATFORMS=cpu``) — this file IS the CI
-"kernels (interpret)" step, so it must stay importable and green with no
-TPU anywhere.
+satellite): ``psdsf_vds``, ``psdsf_fill``, ``psdsf_fill_bucketed`` and
+the ``_compat`` shim, all runnable on a CPU-only box
+(``JAX_PLATFORMS=cpu``) — this file IS the CI "kernels (interpret)"
+step, so it must stay importable and green with no TPU anywhere.
 
 The deep fill-engine parity suite lives in ``tests/test_fill_bisect.py``;
 here each kernel is exercised against its independent oracle through the
@@ -43,8 +43,9 @@ class TestCompatShim:
         import inspect
 
         from repro.kernels.psdsf_fill import kernel as fill_kernel
+        from repro.kernels.psdsf_fill_bucketed import kernel as bfill_kernel
         from repro.kernels.psdsf_vds import kernel as vds_kernel
-        for mod in (vds_kernel, fill_kernel):
+        for mod in (vds_kernel, fill_kernel, bfill_kernel):
             tree = ast.parse(inspect.getsource(mod))
             names = {n.attr for n in ast.walk(tree)
                      if isinstance(n, ast.Attribute)}
@@ -119,6 +120,85 @@ class TestPsdsfFill:
                                 g, x_ext, mode="rdm")
         scale = max(float(np.abs(want).max()), 1.0)
         assert float(np.abs(got - want).max()) <= 5e-6 * scale
+
+class TestPsdsfFillBucketed:
+    @staticmethod
+    def _gathered(prob, g, x_ext):
+        from repro.core.layout import BucketedLayout
+        lay = BucketedLayout.from_support(g > 0)
+        idx, mask = lay.indices, lay.mask
+        gam_b = np.where(mask, np.take_along_axis(g.T, idx, axis=1), 0.0)
+        xeb = np.where(mask, np.take_along_axis(x_ext.T, idx, axis=1), 0.0)
+        return lay, prob.demands[idx], prob.weights[idx], gam_b, xeb, mask
+
+    @pytest.mark.parametrize("mode", ["rdm", "tdm"])
+    @pytest.mark.parametrize("prob_fn", [fig1_instance, fig2_instance,
+                                         dense_random_instance])
+    def test_bucketed_fill_matches_oracle_f64(self, x64, mode, prob_fn):
+        from repro.kernels.psdsf_fill_bucketed.ops import \
+            fill_cluster_bucketed_padded
+        from repro.kernels.psdsf_fill_bucketed.ref import \
+            fill_cluster_bucketed_ref
+        prob = prob_fn()
+        g = gamma_matrix(prob)
+        rng = np.random.default_rng(9)
+        x_ext = rng.uniform(0.0, 2.0, (prob.num_users, prob.num_servers))
+        _, dem_b, phi_b, gam_b, xeb, mask = self._gathered(prob, g, x_ext)
+        got = fill_cluster_bucketed_padded(prob.capacities, dem_b, phi_b,
+                                           gam_b, xeb, mask, mode=mode,
+                                           interpret=True)
+        want = fill_cluster_bucketed_ref(prob.capacities, dem_b, phi_b,
+                                         gam_b, xeb, mask, mode=mode)
+        np.testing.assert_allclose(got, want, atol=1e-9)
+
+    @pytest.mark.parametrize("mode", ["rdm", "tdm"])
+    def test_bucketed_fill_matches_dense_kernel_f64(self, x64, mode):
+        # the two kernels must agree at the DENSE fixed-point contract,
+        # not just each against its own oracle: scatter the bucketed fill
+        # and compare to the dense kernel on a sparse cell instance
+        from repro.core.instances import sparse_cell_instance
+        from repro.kernels.psdsf_fill.ops import fill_cluster_padded
+        from repro.kernels.psdsf_fill_bucketed.ops import \
+            fill_cluster_bucketed_padded
+        prob, _ = sparse_cell_instance(num_users=200, num_servers=32,
+                                       density=0.1, cells=4, seed=3)
+        g = gamma_matrix(prob)
+        rng = np.random.default_rng(4)
+        x_ext = rng.uniform(0.0, 2.0, (prob.num_users, prob.num_servers))
+        lay, dem_b, phi_b, gam_b, xeb, mask = self._gathered(prob, g, x_ext)
+        got = fill_cluster_bucketed_padded(prob.capacities, dem_b, phi_b,
+                                           gam_b, xeb, mask, mode=mode,
+                                           interpret=True)
+        dense = fill_cluster_padded(prob.capacities, prob.demands,
+                                    prob.weights, g, x_ext, mode=mode,
+                                    interpret=True)
+        np.testing.assert_allclose(lay.scatter(got), dense, atol=1e-9)
+
+    def test_degenerate_buckets(self, x64):
+        # an empty server bucket and a user eligible nowhere must both be
+        # inert; density=1 buckets must reproduce the dense oracle
+        from repro.kernels.psdsf_fill_bucketed.ops import \
+            fill_cluster_bucketed_padded
+        from repro.kernels.psdsf_fill_bucketed.ref import \
+            fill_cluster_bucketed_ref
+        prob = dense_random_instance(num_users=24, num_servers=6)
+        elig = prob.eligibility.copy()
+        elig[:, 2] = 0.0                 # server 2: nobody eligible
+        elig[5, :] = 0.0                 # user 5: eligible nowhere
+        from repro.core.types import AllocationProblem
+        prob = AllocationProblem(prob.demands, prob.capacities,
+                                 prob.weights, elig)
+        g = gamma_matrix(prob)
+        rng = np.random.default_rng(0)
+        x_ext = rng.uniform(0.0, 2.0, (prob.num_users, prob.num_servers))
+        lay, dem_b, phi_b, gam_b, xeb, mask = self._gathered(prob, g, x_ext)
+        got = fill_cluster_bucketed_padded(prob.capacities, dem_b, phi_b,
+                                           gam_b, xeb, mask, interpret=True)
+        want = fill_cluster_bucketed_ref(prob.capacities, dem_b, phi_b,
+                                         gam_b, xeb, mask)
+        np.testing.assert_allclose(got, want, atol=1e-9)
+        assert not mask[2].any() and np.abs(got[2]).max() == 0.0
+        assert lay.scatter(got)[5].max() == 0.0
 
     def test_fixed_point_is_invariant(self, x64):
         # one whole-cluster Jacobi fill AT the solved fixed point must be
