@@ -1,52 +1,31 @@
-"""Docstring-coverage lint for the public API of ``core/`` and ``sched/``.
+"""Docstring-coverage lint — thin shim over ``repro.analysis.docstrings``.
 
-The docs layer (``docs/``) points readers INTO the code — paper_map.md says
-"Eq. 6 is ``psdsf_weights``" and stops, trusting the symbol's own docstring
-to carry the details. That only works if public symbols actually have
-docstrings, so the CI fast lane enforces a coverage floor here instead of
-hoping review catches omissions. Implemented in-repo with ``ast`` (the
-container has no pydocstyle/interrogate) and intentionally minimal: it
-checks PRESENCE on public symbols, not style.
-
-Public = module itself, plus every module-level function, class, and method
-whose name doesn't start with ``_`` (dunders are private here too —
-``__init__`` is documented by its class). Functions nested inside function
-bodies are closures, not API, and are skipped; a public method on a
-private class still counts, since callers receive those instances.
+The audit itself now lives in the static-analysis suite
+(``python -m repro.analysis``, pass ``docstrings``, codes DS501/DS502) so
+the coverage rule is enforced alongside the other contract lints. This
+entry point is kept because the CI fast lane, ROADMAP, and docs all call
+``python benchmarks/lint_docstrings.py`` — it loads the same repo model,
+runs the same pass configuration, and keeps the original CLI and exit
+semantics (exit 1 below the floor, listing every missing symbol).
 
 Usage: python benchmarks/lint_docstrings.py [--min PERCENT]
-Exits 1 when coverage falls below the floor, listing every missing symbol.
 """
 from __future__ import annotations
 
 import argparse
-import ast
+import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
-PACKAGES = ("src/repro/core", "src/repro/sched")
-DEFAULT_MIN = 95.0
+if str(ROOT / "src") not in sys.path:
+    sys.path.insert(0, str(ROOT / "src"))
 
+from repro.analysis.contracts import DOCSTRINGS  # noqa: E402
+from repro.analysis.docstrings import coverage  # noqa: E402
+from repro.analysis.model import RepoModel  # noqa: E402
 
-def _public(name: str) -> bool:
-    return not name.startswith("_")
-
-
-def audit_module(path: Path):
-    """Yield ``(symbol, has_docstring)`` for the module and its public API."""
-    tree = ast.parse(path.read_text(), filename=str(path))
-    rel = path.relative_to(ROOT)
-    yield f"{rel} (module)", ast.get_docstring(tree) is not None
-    defs = (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
-    stack = [node for node in tree.body if isinstance(node, defs)]
-    while stack:
-        node = stack.pop()
-        if isinstance(node, ast.ClassDef):
-            # methods and nested classes are API; closures below are not
-            stack.extend(n for n in node.body if isinstance(n, defs))
-        if _public(node.name):
-            yield (f"{rel}:{node.lineno} {node.name}",
-                   ast.get_docstring(node) is not None)
+PACKAGES = tuple(DOCSTRINGS["packages"])
+DEFAULT_MIN = float(DOCSTRINGS["min_percent"])
 
 
 def main(argv=None) -> int:
@@ -55,14 +34,8 @@ def main(argv=None) -> int:
                     help=f"coverage floor in percent "
                          f"(default {DEFAULT_MIN})")
     args = ap.parse_args(argv)
-    total, documented, missing = 0, 0, []
-    for pkg in PACKAGES:
-        for path in sorted((ROOT / pkg).glob("*.py")):
-            for symbol, ok in audit_module(path):
-                total += 1
-                documented += ok
-                if not ok:
-                    missing.append(symbol)
+    model = RepoModel.load(ROOT, rel_dirs=("src",))
+    total, documented, missing = coverage(model, PACKAGES)
     pct = 100.0 * documented / total if total else 100.0
     status = "OK" if pct >= args.min else "FAILED"
     print(f"docstring lint {status}: {documented}/{total} public symbols "
@@ -70,8 +43,8 @@ def main(argv=None) -> int:
           f"{', '.join(PACKAGES)}")
     if missing:
         print("undocumented:")
-        for symbol in missing:
-            print(f"  - {symbol}")
+        for rel, symbol, line in missing:
+            print(f"  - {rel}:{line} {symbol}")
     return 0 if pct >= args.min else 1
 
 

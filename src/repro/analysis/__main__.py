@@ -1,0 +1,55 @@
+"""CLI driver: ``python -m repro.analysis [--check] [--json PATH] ...``.
+
+Default invocation prints the text report and always exits 0 (report
+mode); ``--check`` exits 1 when any unbaselined error-severity finding
+survives — that is the CI fast lane's "Static analysis" gate.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .runner import PASSES, run_analysis, write_json
+
+
+def _default_root() -> Path:
+    """Repo root: the directory holding ``src/`` above this package."""
+    return Path(__file__).resolve().parents[3]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Contract-lint suite: axis-threading, jit-purity, "
+                    "kernel-triple, observability and docstring passes.")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero on unbaselined error findings "
+                         "(the CI gate)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the machine-readable report here")
+    ap.add_argument("--passes", nargs="+", metavar="NAME", default=None,
+                    choices=sorted(PASSES),
+                    help=f"run a subset (default: all of "
+                         f"{', '.join(PASSES)})")
+    ap.add_argument("--baseline", metavar="PATH", default=None,
+                    help="baseline file (default: "
+                         "benchmarks/analysis_baseline.json)")
+    ap.add_argument("--root", metavar="PATH", default=None,
+                    help="repo root (default: auto-detected)")
+    args = ap.parse_args(argv)
+
+    root = Path(args.root) if args.root else _default_root()
+    baseline = Path(args.baseline) if args.baseline else None
+    report = run_analysis(root, passes=args.passes, baseline_path=baseline)
+    print(report.render_text())
+    if args.json:
+        write_json(report, Path(args.json))
+        print(f"json report written to {args.json}")
+    if args.check and report.gate_failures:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

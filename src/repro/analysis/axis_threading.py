@@ -1,0 +1,359 @@
+"""Axis-threading drift pass (codes ``AX1xx``).
+
+For every (entry point, axis) cell of the contract table
+(``contracts.ENTRY_POINTS``) this pass proves three properties on the AST:
+
+* **accepts** -- the entry's signature carries the axis (named parameter,
+  or ``**kwargs`` for ``via="kwargs"`` cells);
+* **validates** -- an unknown value raises loudly. Validation is found by
+  a bounded recursion: a ``raise`` whose guard or message mentions the
+  carrying name counts, and so does forwarding the value (keyword,
+  positional, ``**kwargs``, or a ``kw.pop("axis")`` re-binding) into a
+  function that validates it. Registry-dispatched entries instead declare
+  ``sinks``: every listed sink must validate the axis itself, which is the
+  multi-layer guarantee (dropping the check from ONE numpy solver fails
+  the build even though ``engine.solve`` still looks fine);
+* **forwards** -- the value reaches a callee (skipped for terminal
+  consumers, ``forward=False``).
+
+Known limitation (documented, accepted): the raise heuristic proves "some
+unknown values raise", not full membership validation — a check that
+rejects one bad literal but swallows others passes. Dropping a check
+entirely (the drift mode the ISSUE targets) is always caught.
+
+Finding codes::
+
+    AX101  entry point does not accept a contracted axis
+    AX102  axis accepted but no validation found
+    AX103  axis accepted but never forwarded to a callee
+    AX104  declared sink missing, unresolvable, or not validating
+    AX105  contract row references a file/function that does not exist
+    AX106  registered axis has no contract cell for an entry point
+    AX107  an "n/a" waiver contradicts the signature (param exists)
+    AX108  jitted static_argname looks like an undeclared engine axis
+    AX109  validation raises a bare value (no message naming the
+           allowed set)
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .findings import Finding, Severity
+from .model import (FuncEntry, RepoModel, call_base_name, iter_functions,
+                    jit_static_argnames, kwargs_name, mentions, param_names)
+
+PASS_NAME = "axis-threading"
+
+_MAX_DEPTH = 6
+
+
+def _finding(code: str, file: str, line: int, symbol: str, msg: str,
+             severity: str = Severity.ERROR) -> Finding:
+    return Finding(code=code, severity=severity, file=file, line=line,
+                   symbol=symbol, message=msg, pass_name=PASS_NAME)
+
+
+def _local_aliases(fn: ast.AST, names: Set[str], axis: str) -> Set[str]:
+    """Names re-binding the axis value inside ``fn`` (nested closures
+    included — they capture the carried names lexically): plain renames of
+    a carried name and ``target = kw.pop("axis", ...)`` / ``kw["axis"]``
+    extractions from a carried kwargs dict."""
+    out = set(names)
+    for _ in range(3):  # fixpoint over chained renames (tiny bodies)
+        grew = False
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Assign):
+                continue
+            val = node.value
+            hit = False
+            if isinstance(val, ast.Name) and val.id in out:
+                hit = True
+            elif (isinstance(val, ast.Call)
+                  and isinstance(val.func, ast.Attribute)
+                  and val.func.attr in ("pop", "get")
+                  and isinstance(val.func.value, ast.Name)
+                  and val.func.value.id in out
+                  and val.args
+                  and isinstance(val.args[0], ast.Constant)
+                  and val.args[0].value == axis):
+                hit = True
+            elif (isinstance(val, ast.Subscript)
+                  and isinstance(val.value, ast.Name)
+                  and val.value.id in out
+                  and isinstance(val.slice, ast.Constant)
+                  and val.slice.value == axis):
+                hit = True
+            if hit:
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name) and tgt.id not in out:
+                        out.add(tgt.id)
+                        grew = True
+        if not grew:
+            break
+    return out
+
+
+def _validating_raises(fn: ast.AST, names: Set[str]) -> List[ast.Raise]:
+    """Raise statements that reject a carried value: guarded by an ``if``
+    whose test mentions a carried name, or whose message mentions one
+    (nested closures included — they capture the names lexically)."""
+    hits: List[ast.Raise] = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.If) and mentions(node.test, names):
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Raise):
+                    hits.append(sub)
+        elif isinstance(node, ast.Raise) and node.exc is not None \
+                and mentions(node.exc, names):
+            hits.append(node)
+    return hits
+
+
+def _bare_value_raises(raises: Iterable[ast.Raise],
+                       names: Set[str]) -> List[ast.Raise]:
+    """Raises of the form ``raise ValueError(name)`` — loud in type but
+    mute in message (no allowed-set text)."""
+    out = []
+    for r in raises:
+        exc = r.exc
+        if (isinstance(exc, ast.Call) and len(exc.args) == 1
+                and not exc.keywords
+                and isinstance(exc.args[0], ast.Name)
+                and exc.args[0].id in names):
+            out.append(r)
+    return out
+
+
+def _map_positional(callee: ast.AST, index: int) -> Optional[str]:
+    """Formal parameter name receiving positional arg ``index`` (skipping
+    ``self``/``cls`` on methods)."""
+    formals = param_names(callee)
+    if formals and formals[0] in ("self", "cls"):
+        formals = formals[1:]
+    return formals[index] if index < len(formals) else None
+
+
+def _entry_names_for(callee: ast.AST, axis: str) -> Optional[Set[str]]:
+    """Initial carried-name set when entering ``callee`` with the axis
+    riding its kwargs or its like-named parameter."""
+    if axis in param_names(callee):
+        return {axis}
+    kw = kwargs_name(callee)
+    if kw is not None:
+        return {kw}
+    return None
+
+
+class _Grounder:
+    """Bounded-recursion validation search over the function index."""
+
+    def __init__(self, model: RepoModel, axis: str):
+        self.model = model
+        self.axis = axis
+        self.bare: List[Tuple[FuncEntry, ast.Raise]] = []
+
+    def validates(self, entry: FuncEntry, names: Set[str],
+                  depth: int = _MAX_DEPTH,
+                  seen: Optional[Set[Tuple[int, frozenset]]] = None) -> bool:
+        if seen is None:
+            seen = set()
+        key = (id(entry.node), frozenset(names))
+        if key in seen:
+            return False
+        seen.add(key)
+        fn = entry.node
+        aliased = _local_aliases(fn, names, self.axis)
+        raises = _validating_raises(fn, aliased)
+        if raises:
+            for r in _bare_value_raises(raises, aliased):
+                self.bare.append((entry, r))
+            return True
+        if depth <= 0:
+            return False
+        calls = [n for n in ast.walk(fn) if isinstance(n, ast.Call)]
+        for call in calls:
+            base = call_base_name(call)
+            if base is None:
+                continue
+            targets = self.model.resolve_callable(base)
+            if not targets:
+                continue
+            carried: List[Set[str]] = []
+            for kw in call.keywords:
+                if kw.arg is None:  # **expansion
+                    if isinstance(kw.value, ast.Name) \
+                            and kw.value.id in aliased:
+                        for t in targets:
+                            nm = _entry_names_for(t.node, self.axis)
+                            if nm and self.validates(t, nm, depth - 1, seen):
+                                return True
+                elif mentions(kw.value, aliased):
+                    carried.append({kw.arg})
+            for i, arg in enumerate(call.args):
+                if isinstance(arg, ast.Starred):
+                    continue
+                if mentions(arg, aliased):
+                    for t in targets:
+                        formal = _map_positional(t.node, i)
+                        if formal and self.validates(t, {formal},
+                                                     depth - 1, seen):
+                            return True
+            for nm in carried:
+                for t in targets:
+                    if nm & set(param_names(t.node)) or kwargs_name(t.node):
+                        tn = nm if nm & set(param_names(t.node)) else \
+                            {kwargs_name(t.node)}
+                        if self.validates(t, tn, depth - 1, seen):
+                            return True
+        return False
+
+
+def _forwards(fn: ast.AST, names: Set[str], axis: str) -> bool:
+    """True when a carried name reaches any call (keyword, positional or
+    ``**`` expansion; nested closures included)."""
+    aliased = _local_aliases(fn, names, axis)
+    for call in (n for n in ast.walk(fn) if isinstance(n, ast.Call)):
+        for kw in call.keywords:
+            if kw.arg is None:
+                if isinstance(kw.value, ast.Name) and kw.value.id in aliased:
+                    return True
+            elif mentions(kw.value, aliased):
+                return True
+        for arg in call.args:
+            if isinstance(arg, ast.Starred):
+                if isinstance(arg.value, ast.Name) \
+                        and arg.value.id in aliased:
+                    return True
+            elif mentions(arg, aliased):
+                return True
+    return False
+
+
+def run(model: RepoModel, axes: Tuple[str, ...], entry_points: Dict,
+        static_modules: Tuple[str, ...] = (),
+        static_non_axes: frozenset = frozenset()) -> List[Finding]:
+    """Check every contract cell; sweep static_argnames for new axes."""
+    findings: List[Finding] = []
+
+    for (file, qualname), row in entry_points.items():
+        entry = model.lookup(file, qualname)
+        if entry is None:
+            findings.append(_finding(
+                "AX105", file, 1, qualname,
+                f"contract references {qualname!r} in {file}, which does "
+                f"not exist — update contracts.ENTRY_POINTS"))
+            continue
+        fn = entry.node
+        formals = set(param_names(fn))
+        for axis in axes:
+            spec = row.get(axis)
+            symbol = f"{qualname}[{axis}]"
+            if spec is None:
+                findings.append(_finding(
+                    "AX106", file, fn.lineno, symbol,
+                    f"axis {axis!r} has no contract cell for this entry "
+                    f"point — declare how it threads or add an 'n/a' "
+                    f"waiver in contracts.ENTRY_POINTS"))
+                continue
+            if isinstance(spec, str):  # explicit waiver
+                if axis in formals:
+                    findings.append(_finding(
+                        "AX107", file, fn.lineno, symbol,
+                        f"contract waives axis {axis!r} as n/a but the "
+                        f"signature has a parameter named {axis!r}"))
+                continue
+            param = spec.get("param", axis)
+            via_kwargs = spec.get("via") == "kwargs"
+            if via_kwargs:
+                kwname = kwargs_name(fn)
+                if kwname is None:
+                    findings.append(_finding(
+                        "AX101", file, fn.lineno, symbol,
+                        f"axis {axis!r} is contracted to ride **kwargs but "
+                        f"the entry point takes none"))
+                    continue
+                names = {kwname}
+            else:
+                if param not in formals:
+                    findings.append(_finding(
+                        "AX101", file, fn.lineno, symbol,
+                        f"entry point does not accept axis {axis!r} "
+                        f"(expected parameter {param!r})"))
+                    continue
+                names = {param}
+
+            grounder = _Grounder(model, axis)
+            sinks = spec.get("sinks")
+            if sinks:
+                for sink in sinks:
+                    targets = model.resolve_callable(sink)
+                    if not targets:
+                        findings.append(_finding(
+                            "AX104", file, fn.lineno, f"{symbol}->{sink}",
+                            f"declared sink {sink!r} for axis {axis!r} "
+                            f"does not exist"))
+                        continue
+                    for t in targets:
+                        tn = _entry_names_for(t.node, axis)
+                        if tn is None:
+                            findings.append(_finding(
+                                "AX104", t.module.rel, t.node.lineno,
+                                f"{symbol}->{sink}",
+                                f"sink {sink!r} accepts neither a "
+                                f"{axis!r} parameter nor **kwargs"))
+                        elif not grounder.validates(t, tn):
+                            findings.append(_finding(
+                                "AX104", t.module.rel, t.node.lineno,
+                                f"{symbol}->{sink}",
+                                f"sink {sink!r} does not validate axis "
+                                f"{axis!r}: an unknown value passes "
+                                f"silently"))
+                if spec.get("require_direct") \
+                        and not grounder.validates(entry, names):
+                    findings.append(_finding(
+                        "AX102", file, fn.lineno, symbol,
+                        f"axis {axis!r} must also be validated in the "
+                        f"entry itself (require_direct) but no check was "
+                        f"found"))
+            elif not grounder.validates(entry, names):
+                findings.append(_finding(
+                    "AX102", file, fn.lineno, symbol,
+                    f"axis {axis!r} is accepted but never validated: an "
+                    f"unknown value neither raises here nor in any "
+                    f"function it is forwarded to"))
+            for bentry, braise in grounder.bare:
+                findings.append(_finding(
+                    "AX109", bentry.module.rel, braise.lineno,
+                    f"{bentry.qualname}[{axis}]",
+                    f"validation for axis {axis!r} raises the bare value "
+                    f"— name the bad value and the allowed set in the "
+                    f"message"))
+            if spec.get("forward") and not _forwards(fn, names, axis):
+                findings.append(_finding(
+                    "AX103", file, fn.lineno, symbol,
+                    f"axis {axis!r} is accepted but never forwarded to "
+                    f"any callee"))
+
+    # -- AX108: static_argnames sweep for undeclared axes ------------------
+    for rel in static_modules:
+        mod = model.modules.get(rel)
+        if mod is None:
+            findings.append(_finding(
+                "AX105", rel, 1, rel,
+                "contracts.STATIC_ARGNAME_MODULES lists a missing module"))
+            continue
+        for qualname, fn in iter_functions(mod.tree):
+            for name in jit_static_argnames(fn):
+                if name not in static_non_axes:
+                    findings.append(_finding(
+                        "AX108", rel, fn.lineno, f"{qualname}[{name}]",
+                        f"static argname {name!r} looks like a new engine "
+                        f"axis nobody declared — add it to contracts.AXES "
+                        f"(and a cell per entry point) or to "
+                        f"STATIC_NON_AXES"))
+    # de-duplicate (the same bare raise can be reached from several cells)
+    uniq: Dict[Tuple[str, str, int], Finding] = {}
+    for f in findings:
+        uniq.setdefault((f.code, f.symbol, f.line), f)
+    return list(uniq.values())

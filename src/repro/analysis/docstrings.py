@@ -1,0 +1,86 @@
+"""Docstring-coverage pass (codes ``DS5xx``).
+
+The docs layer points readers INTO the code (paper_map.md says "Eq. 6 is
+``psdsf_weights``" and stops), so public symbols must carry their own
+docstrings. Ported from ``benchmarks/lint_docstrings.py`` (which is now a
+thin shim over this pass): PRESENCE on public symbols, not style.
+
+Public = the module itself, plus every module-level function, class, and
+method whose name doesn't start with ``_`` (dunders are private here —
+``__init__`` is documented by its class). Closures are skipped; a public
+method on a private class still counts.
+
+Finding codes::
+
+    DS501  package-set coverage below the floor (gates --check)
+    DS502  individual public symbol without a docstring (warn)
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Tuple
+
+from .findings import Finding, Severity
+from .model import RepoModel
+
+PASS_NAME = "docstrings"
+
+_DEFS = (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+
+
+def audit_module(tree: ast.Module, rel: str
+                 ) -> Iterator[Tuple[str, int, bool]]:
+    """Yield ``(symbol, line, has_docstring)`` for the module's public API."""
+    yield f"{rel} (module)", 1, ast.get_docstring(tree) is not None
+    stack = [node for node in tree.body if isinstance(node, _DEFS)]
+    while stack:
+        node = stack.pop()
+        if isinstance(node, ast.ClassDef):
+            # methods and nested classes are API; closures below are not
+            stack.extend(n for n in node.body if isinstance(n, _DEFS))
+        if not node.name.startswith("_"):
+            yield (f"{node.name}", node.lineno,
+                   ast.get_docstring(node) is not None)
+
+
+def coverage(model: RepoModel, packages: Tuple[str, ...]
+             ) -> Tuple[int, int, List[Tuple[str, str, int]]]:
+    """(total, documented, missing [(rel, symbol, line), ...]) across the
+    top-level modules of the given packages."""
+    total, documented = 0, 0
+    missing: List[Tuple[str, str, int]] = []
+    for pkg in packages:
+        prefix = pkg.rstrip("/") + "/"
+        for rel, mod in sorted(model.modules.items()):
+            if not rel.startswith(prefix) \
+                    or "/" in rel[len(prefix):]:
+                continue
+            for symbol, line, ok in audit_module(mod.tree, rel):
+                total += 1
+                documented += ok
+                if not ok:
+                    missing.append((rel, symbol, line))
+    return total, documented, missing
+
+
+def run(model: RepoModel, config: Dict) -> List[Finding]:
+    """Coverage floor over the configured package set."""
+    packages = tuple(config["packages"])
+    floor = float(config["min_percent"])
+    total, documented, missing = coverage(model, packages)
+    pct = 100.0 * documented / total if total else 100.0
+    findings = [
+        Finding(code="DS502", severity=Severity.WARN, file=rel, line=line,
+                symbol=symbol, message="public symbol has no docstring",
+                pass_name=PASS_NAME)
+        for rel, symbol, line in missing
+    ]
+    if pct < floor:
+        findings.insert(0, Finding(
+            code="DS501", severity=Severity.ERROR,
+            file=packages[0], line=1, symbol="coverage",
+            message=f"docstring coverage {pct:.1f}% is below the "
+                    f"{floor:.1f}% floor ({documented}/{total} public "
+                    f"symbols documented across {', '.join(packages)})",
+            pass_name=PASS_NAME))
+    return findings

@@ -1,0 +1,191 @@
+"""jit-purity pass (codes ``JP2xx``).
+
+Roots are functions the tracer runs: ``jax.jit``/``jax.vmap``-decorated
+defs (including closures built inside jitted-tick factories, e.g.
+``dynamic._tick_jax_fn``) plus name-pattern roots (``_solve_core*``-style
+traced helpers that are called under an outer jit). The scope is the
+call closure of the roots over same-repo functions, minus the declared
+trace-time gates (host-side validators that run on static arguments
+during tracing and may raise/IO freely).
+
+Inside the scope the pass flags host-level escapes that would either crash
+under the tracer or silently concretize (forcing a device sync / constant-
+folding a traced value)::
+
+    JP201  .item() concretization
+    JP202  float()/int()/bool() on a non-constant (traced) expression
+    JP203  numpy call on a traced value (np.* in traced scope; dtype and
+           constant attributes are allowed)
+    JP204  host I/O or nondeterminism (print/open/time/np.random/random)
+    JP205  Python branch (if/while) on a traced-array predicate
+           (.any()/.all()/reductions/jnp comparisons in the test)
+
+Raises are deliberately NOT flagged: trace-time validation of static
+arguments (``_check_placement`` etc.) is the repo's contract style.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Set, Tuple
+
+from .findings import Finding, Severity
+from .model import (RepoModel, call_base_name, dotted_name, is_jit_decorated,
+                    iter_functions, own_calls, own_nodes)
+
+PASS_NAME = "jit-purity"
+
+_IO_CALLS = {"print", "open", "input", "breakpoint"}
+_IO_DOTTED = {"time.time", "time.perf_counter", "time.monotonic",
+              "datetime.now", "datetime.utcnow", "random.random",
+              "random.randint", "random.choice", "random.seed"}
+_REDUCTION_METHODS = {"any", "all", "max", "min", "sum", "item"}
+
+
+def _finding(code: str, file: str, line: int, symbol: str,
+             msg: str) -> Finding:
+    return Finding(code=code, severity=Severity.ERROR, file=file, line=line,
+                   symbol=symbol, message=msg, pass_name=PASS_NAME)
+
+
+def _np_aliases(tree: ast.Module) -> Set[str]:
+    """Module-level aliases of host numpy (``import numpy as np``)."""
+    out = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "numpy":
+                    out.add(a.asname or "numpy")
+    return out
+
+
+def _jnp_aliases(tree: ast.Module) -> Set[str]:
+    """Module-level aliases of jax.numpy (``import jax.numpy as jnp``)."""
+    out = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "jax.numpy":
+                    out.add(a.asname or "jax.numpy")
+    return out
+
+
+def _collect_scope(model: RepoModel, scan_rels: List[str],
+                   root_patterns: Tuple[str, ...],
+                   gates: frozenset) -> Dict[int, Tuple]:
+    """Map id(node) -> (module, qualname, node) for every function in the
+    traced scope: roots + call closure within the scanned modules."""
+    pats = [re.compile(p) for p in root_patterns]
+    scope: Dict[int, Tuple] = {}
+    work: List[Tuple] = []
+
+    def add(mod, qualname, fn):
+        """Add a function AND its nested closures (they trace with it)."""
+        if id(fn) in scope:
+            return
+        scope[id(fn)] = (mod, qualname, fn)
+        work.append((mod, qualname, fn))
+        for sub_qn, sub in iter_functions(fn):
+            if sub.name not in gates and id(sub) not in scope:
+                scope[id(sub)] = (mod, f"{qualname}.{sub_qn}", sub)
+                work.append((mod, f"{qualname}.{sub_qn}", sub))
+
+    for rel in scan_rels:
+        mod = model.modules[rel]
+        for qualname, fn in iter_functions(mod.tree):
+            base = fn.name
+            if base in gates:
+                continue
+            if is_jit_decorated(fn) or any(p.search(base) for p in pats):
+                add(mod, qualname, fn)
+    scan_set = set(scan_rels)
+    while work:
+        mod, qualname, fn = work.pop()
+        local = {sub.name for _, sub in iter_functions(fn)}
+        for call in own_calls(fn):
+            base = call_base_name(call)
+            if base is None or base in gates or base in local:
+                continue  # nested closures were added with their parent
+            cands = [t for t in model.functions.get(base, ())
+                     if t.module.rel in scan_set]
+            # resolve like python does: same module wins; a cross-module
+            # name is only followed when unambiguous (base-name collisions
+            # on nested helpers otherwise leak numpy code into the scope)
+            same = [t for t in cands if t.module is mod]
+            for t in same or (cands if len(cands) == 1 else ()):
+                add(t.module, t.qualname, t.node)
+    return scope
+
+
+def _is_traced_predicate(test: ast.AST, jnp_names: Set[str]) -> bool:
+    """Heuristic: the test evaluates a traced-array reduction/comparison."""
+    for node in ast.walk(test):
+        if isinstance(node, ast.Call):
+            func = node.func
+            if isinstance(func, ast.Attribute):
+                if func.attr in _REDUCTION_METHODS:
+                    return True
+                root = dotted_name(func)
+                if root and root.split(".")[0] in jnp_names:
+                    return True
+    return False
+
+
+def run(model: RepoModel, scan_dirs: Tuple[str, ...],
+        root_patterns: Tuple[str, ...], trace_time_gates: frozenset,
+        np_const_allow: frozenset) -> List[Finding]:
+    """Scan the traced scope of every module under ``scan_dirs``."""
+    findings: List[Finding] = []
+    scan_rels = [rel for rel in model.modules
+                 if any(rel.startswith(d.rstrip("/") + "/") or rel == d
+                        for d in scan_dirs)]
+    scope = _collect_scope(model, scan_rels, root_patterns,
+                           trace_time_gates)
+    for mod, qualname, fn in scope.values():
+        np_names = _np_aliases(mod.tree)
+        jnp_names = _jnp_aliases(mod.tree) or {"jnp"}
+        for node in own_nodes(fn):
+            if isinstance(node, ast.Call):
+                func = node.func
+                base = call_base_name(node)
+                dn = dotted_name(func) or ""
+                root = dn.split(".")[0] if dn else ""
+                if isinstance(func, ast.Attribute) and func.attr == "item":
+                    findings.append(_finding(
+                        "JP201", mod.rel, node.lineno, qualname,
+                        ".item() concretizes a traced value (forces a "
+                        "host sync; breaks under jit)"))
+                elif base in ("float", "int", "bool") \
+                        and isinstance(func, ast.Name) and node.args \
+                        and not isinstance(node.args[0], ast.Constant):
+                    findings.append(_finding(
+                        "JP202", mod.rel, node.lineno, qualname,
+                        f"{base}() on a non-constant inside traced code "
+                        f"concretizes a traced value"))
+                elif root in np_names:
+                    attr = dn.split(".", 1)[1] if "." in dn else ""
+                    leaf = attr.split(".")[0]
+                    if attr.startswith("random."):
+                        findings.append(_finding(
+                            "JP204", mod.rel, node.lineno, qualname,
+                            f"host RNG {dn} inside traced code is an "
+                            f"impurity (retraces differ); use jax.random"))
+                    elif leaf not in np_const_allow:
+                        findings.append(_finding(
+                            "JP203", mod.rel, node.lineno, qualname,
+                            f"host numpy call {dn}() on (potentially) "
+                            f"traced values — use jnp inside traced code"))
+                elif base in _IO_CALLS or dn in _IO_DOTTED:
+                    findings.append(_finding(
+                        "JP204", mod.rel, node.lineno, qualname,
+                        f"host I/O / nondeterminism ({dn or base}) inside "
+                        f"traced code — runs at trace time only and "
+                        f"breaks retrace purity"))
+            elif isinstance(node, (ast.If, ast.While)) \
+                    and _is_traced_predicate(node.test, jnp_names):
+                kind = "while" if isinstance(node, ast.While) else "if"
+                findings.append(_finding(
+                    "JP205", mod.rel, node.lineno, qualname,
+                    f"Python `{kind}` on a traced-array predicate — use "
+                    f"lax.cond/lax.while_loop/jnp.where"))
+    return findings

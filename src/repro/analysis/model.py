@@ -1,0 +1,232 @@
+"""Repo AST model: parse every tracked module once, index functions/classes.
+
+All passes share one :class:`RepoModel` so a whole-repo run parses each file
+exactly once. The function index maps *base names* (``solve_with_placement``,
+not ``repro.core.placement.solve_with_placement``) to definitions, which is
+the right granularity for grounding keyword-forwarding chains across modules
+without resolving imports: the repo has no base-name collisions among the
+functions any contract references, and a collision would only make the
+threading pass *stricter* (every candidate must validate).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+
+@dataclasses.dataclass
+class FuncEntry:
+    """One function (or method) definition plus where it lives."""
+
+    module: "Module"
+    node: ast.AST  # FunctionDef | AsyncFunctionDef
+    qualname: str
+
+
+@dataclasses.dataclass
+class Module:
+    """One parsed source file."""
+
+    rel: str  # repo-relative posix path
+    path: Path
+    tree: ast.Module
+    source: str
+
+
+class RepoModel:
+    """Parsed view of the repo used by every pass."""
+
+    def __init__(self, root: Path):
+        self.root = Path(root)
+        self.modules: Dict[str, Module] = {}
+        # base function name -> all defs with that name (any module)
+        self.functions: Dict[str, List[FuncEntry]] = {}
+        # class name -> (module, ClassDef)
+        self.classes: Dict[str, Tuple[Module, ast.ClassDef]] = {}
+
+    @classmethod
+    def load(cls, root: Path,
+             rel_dirs: Sequence[str] = ("src", "tests", "benchmarks"),
+             ) -> "RepoModel":
+        """Parse every ``.py`` under the given repo-relative directories."""
+        model = cls(root)
+        for rel_dir in rel_dirs:
+            base = Path(root) / rel_dir
+            if not base.exists():
+                continue
+            for path in sorted(base.rglob("*.py")):
+                model.add_file(path)
+        return model
+
+    def add_file(self, path: Path) -> Optional[Module]:
+        """Parse and index one file (skipped silently if unparseable paths
+        are excluded upstream; a syntax error raises — the repo must parse).
+        """
+        rel = Path(path).resolve().relative_to(
+            self.root.resolve()).as_posix()
+        source = Path(path).read_text()
+        tree = ast.parse(source, filename=rel)
+        mod = Module(rel=rel, path=Path(path), tree=tree, source=source)
+        self.modules[rel] = mod
+        for qualname, node in iter_functions(tree):
+            self.functions.setdefault(
+                node.name, []).append(FuncEntry(mod, node, qualname))
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef):
+                self.classes.setdefault(node.name, (mod, node))
+        return mod
+
+    def lookup(self, rel: str, qualname: str) -> Optional[FuncEntry]:
+        """Find a specific function by file + dotted qualname."""
+        mod = self.modules.get(rel)
+        if mod is None:
+            return None
+        for qn, node in iter_functions(mod.tree):
+            if qn == qualname:
+                return FuncEntry(mod, node, qn)
+        return None
+
+    def resolve_callable(self, base_name: str) -> List[FuncEntry]:
+        """All plausible targets of a call to ``base_name``: functions with
+        that name, plus ``__init__`` when the name is a known class."""
+        targets = list(self.functions.get(base_name, ()))
+        cls = self.classes.get(base_name)
+        if cls is not None:
+            mod, node = cls
+            for item in node.body:
+                if (isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef))
+                        and item.name == "__init__"):
+                    targets.append(
+                        FuncEntry(mod, item, f"{node.name}.__init__"))
+        return targets
+
+
+# ---------------------------------------------------------------------------
+# AST helpers shared by passes
+
+
+def iter_functions(tree: ast.AST) -> Iterator[Tuple[str, ast.AST]]:
+    """Yield ``(qualname, FunctionDef)`` for every def, including nested
+    ones and methods (qualnames are dotted through classes and parents)."""
+    def visit(node: ast.AST, prefix: str) -> Iterator[Tuple[str, ast.AST]]:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qn = f"{prefix}{child.name}"
+                yield qn, child
+                yield from visit(child, f"{qn}.")
+            elif isinstance(child, ast.ClassDef):
+                yield from visit(child, f"{prefix}{child.name}.")
+            else:
+                yield from visit(child, prefix)
+    yield from visit(tree, "")
+
+
+def call_base_name(call: ast.Call) -> Optional[str]:
+    """Base name of a call target: ``f(...)`` -> ``f``; ``a.b.f(...)`` ->
+    ``f``; anything else (subscripts, calls-of-calls) -> None."""
+    func = call.func
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return None
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """Render ``a.b.c`` attribute chains; None for non-name roots."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def mentions(node: ast.AST, names: Set[str]) -> bool:
+    """True iff any ``ast.Name`` inside ``node`` is in ``names``."""
+    return any(isinstance(n, ast.Name) and n.id in names
+               for n in ast.walk(node))
+
+
+def param_names(fn: ast.AST) -> List[str]:
+    """Positional + keyword-only parameter names (no *args/**kw)."""
+    a = fn.args
+    return [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+
+
+def kwargs_name(fn: ast.AST) -> Optional[str]:
+    """Name of the ``**kwargs`` parameter, if the function takes one."""
+    return fn.args.kwarg.arg if fn.args.kwarg is not None else None
+
+
+def own_calls(fn: ast.AST) -> Iterator[ast.Call]:
+    """Calls in ``fn``'s body, excluding bodies of nested defs (those are
+    separate scopes and are analysed on their own)."""
+    def visit(node: ast.AST) -> Iterator[ast.Call]:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child,
+                          (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.ClassDef)):
+                continue
+            if isinstance(child, ast.Call):
+                yield child
+            yield from visit(child)
+    yield from visit(fn)
+
+
+def own_nodes(fn: ast.AST) -> Iterator[ast.AST]:
+    """All nodes in ``fn``'s body excluding nested def/class bodies."""
+    def visit(node: ast.AST) -> Iterator[ast.AST]:
+        for child in ast.iter_child_nodes(node):
+            yield child
+            if isinstance(child,
+                          (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.ClassDef)):
+                continue
+            yield from visit(child)
+    yield from visit(fn)
+
+
+def decorator_calls(fn: ast.AST) -> Iterator[ast.AST]:
+    """Decorator expressions of a function def."""
+    yield from getattr(fn, "decorator_list", ())
+
+
+def is_jit_decorated(fn: ast.AST) -> bool:
+    """True for ``@jax.jit``/``@jit``/``@functools.partial(jax.jit, ...)``
+    and the vmap equivalents."""
+    traced = {"jax.jit", "jit", "jax.vmap", "vmap", "pl.pallas_call"}
+    for dec in decorator_calls(fn):
+        name = dotted_name(dec)
+        if name in traced:
+            return True
+        if isinstance(dec, ast.Call):
+            dname = dotted_name(dec.func)
+            if dname in traced:
+                return True
+            if dname in ("functools.partial", "partial") and dec.args:
+                if dotted_name(dec.args[0]) in traced:
+                    return True
+    return False
+
+
+def jit_static_argnames(fn: ast.AST) -> List[str]:
+    """``static_argnames`` constants from a jit decorator, if any."""
+    names: List[str] = []
+    for dec in decorator_calls(fn):
+        if not isinstance(dec, ast.Call):
+            continue
+        for kw in dec.keywords:
+            if kw.arg != "static_argnames":
+                continue
+            val = kw.value
+            elts = val.elts if isinstance(val, (ast.Tuple, ast.List)) \
+                else [val]
+            for e in elts:
+                if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                    names.append(e.value)
+    return names

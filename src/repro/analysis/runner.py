@@ -1,0 +1,140 @@
+"""Pass orchestration: build the model once, run passes, apply baseline.
+
+``run_analysis`` is the library face (used by the CLI, the CI step, the
+``lint_docstrings`` shim, and ``tests/test_analysis.py``); every pass also
+exposes a bare ``run(model, ...)`` so fixture tests can drive it against
+synthetic trees with miniature contract tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+from . import (axis_threading, contracts, docstrings, jit_purity,
+               kernel_triples, observability)
+from .findings import Finding, Severity, apply_baseline, gate_count, \
+    load_baseline
+from .model import RepoModel
+
+
+def _run_axes(model: RepoModel) -> List[Finding]:
+    return axis_threading.run(model, contracts.AXES,
+                              contracts.ENTRY_POINTS,
+                              contracts.STATIC_ARGNAME_MODULES,
+                              contracts.STATIC_NON_AXES)
+
+
+def _run_jit(model: RepoModel) -> List[Finding]:
+    cfg = contracts.JIT_PURITY
+    return jit_purity.run(model, cfg["scan_dirs"], cfg["root_patterns"],
+                          cfg["trace_time_gates"], cfg["np_const_allow"])
+
+
+def _run_kernels(model: RepoModel) -> List[Finding]:
+    return kernel_triples.run(model, contracts.KERNELS)
+
+
+def _run_observability(model: RepoModel) -> List[Finding]:
+    return observability.run(model, contracts.OBSERVABILITY)
+
+
+def _run_docstrings(model: RepoModel) -> List[Finding]:
+    return docstrings.run(model, contracts.DOCSTRINGS)
+
+
+#: pass name -> runner, in report order
+PASSES = {
+    "axis-threading": _run_axes,
+    "jit-purity": _run_jit,
+    "kernel-triples": _run_kernels,
+    "observability": _run_observability,
+    "docstrings": _run_docstrings,
+}
+
+
+@dataclasses.dataclass
+class Report:
+    """Everything one analysis run produced."""
+
+    findings: List[Finding]
+    stale_baseline: List[str]
+    passes: List[str]
+
+    @property
+    def gate_failures(self) -> int:
+        """Unbaselined errors — what ``--check`` exits non-zero on."""
+        return gate_count(self.findings)
+
+    def to_json(self) -> dict:
+        """Machine-readable report (the CI artifact)."""
+        by_code: Dict[str, int] = {}
+        for f in self.findings:
+            by_code[f.code] = by_code.get(f.code, 0) + 1
+        return {
+            "passes": self.passes,
+            "summary": {
+                "total": len(self.findings),
+                "baselined": sum(1 for f in self.findings if f.baselined),
+                "gate_failures": self.gate_failures,
+                "by_code": dict(sorted(by_code.items())),
+                "stale_baseline": self.stale_baseline,
+            },
+            "findings": [f.to_dict() for f in self.findings],
+        }
+
+    def render_text(self) -> str:
+        """Human-readable report grouped by pass."""
+        lines: List[str] = []
+        for name in self.passes:
+            group = [f for f in self.findings if f.pass_name == name]
+            live = [f for f in group if not f.baselined
+                    and f.severity == Severity.ERROR]
+            tag = "OK" if not live else f"{len(live)} error(s)"
+            lines.append(f"[{name}] {tag} "
+                         f"({len(group)} finding(s), "
+                         f"{sum(1 for f in group if f.baselined)} "
+                         f"baselined)")
+            for f in sorted(group, key=lambda f: (f.file, f.line, f.code)):
+                lines.append(f"  {f.render()}")
+                if f.baselined:
+                    lines.append(f"    waived: {f.baseline_reason}")
+        for key in self.stale_baseline:
+            lines.append(f"  BL001 [warn] stale baseline entry: {key} "
+                         f"matches no finding — delete it")
+        lines.append(
+            f"analysis: {len(self.findings)} finding(s), "
+            f"{self.gate_failures} gate failure(s)"
+            + (f", {len(self.stale_baseline)} stale baseline entr(y/ies)"
+               if self.stale_baseline else ""))
+        return "\n".join(lines)
+
+
+def run_analysis(root: Path, passes: Optional[Sequence[str]] = None,
+                 baseline_path: Optional[Path] = None,
+                 model: Optional[RepoModel] = None) -> Report:
+    """Run the suite on the repo at ``root`` and apply the baseline."""
+    root = Path(root)
+    names = list(passes) if passes else list(PASSES)
+    unknown = [n for n in names if n not in PASSES]
+    if unknown:
+        raise ValueError(f"unknown pass(es) {unknown}; available: "
+                         f"{', '.join(PASSES)}")
+    if model is None:
+        model = RepoModel.load(root)
+    findings: List[Finding] = []
+    for name in names:
+        findings.extend(PASSES[name](model))
+    if baseline_path is None:
+        baseline_path = root / contracts.BASELINE_PATH
+    baseline = load_baseline(baseline_path)
+    findings, stale = apply_baseline(findings, baseline)
+    return Report(findings=findings, stale_baseline=stale, passes=names)
+
+
+def write_json(report: Report, path: Path) -> None:
+    """Write the JSON artifact (parent dirs created)."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(report.to_json(), indent=2) + "\n")

@@ -168,11 +168,12 @@ class DistributedPSDSF:
         from .placement import FILL_ENGINES, get_placement
 
         if mode not in ("rdm", "tdm"):
-            raise ValueError(mode)
+            raise ValueError(f"mode must be 'rdm' or 'tdm': {mode!r}")
         if engine not in _ENGINES:
             raise ValueError(f"engine must be one of {_ENGINES}: {engine}")
         if precision not in ("highest", "fast"):
-            raise ValueError(precision)
+            raise ValueError(
+                f"precision must be 'highest' or 'fast': {precision!r}")
         if fill not in FILL_ENGINES:
             raise ValueError(f"fill must be one of {FILL_ENGINES}: {fill}")
         get_placement(placement)               # unknown strategies fail fast

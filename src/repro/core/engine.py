@@ -44,6 +44,7 @@ from typing import Callable, Dict, Protocol, Tuple
 
 from .baselines import (solve_cdrf, solve_cdrfh, solve_drf_pooled, solve_tsf,
                         uniform_allocation)
+from .layout import LAYOUTS
 from .placement import get_placement, stranded_fraction
 from .psdsf import SolveInfo, solve_psdsf_rdm, solve_psdsf_tdm
 from .types import Allocation, AllocationProblem
@@ -156,6 +157,8 @@ def _reject_placement(kw: dict, mechanism: str) -> None:
             f"fill; only fill='event', round='gauss' are accepted, got "
             f"fill={fill!r}, round={rnd!r}")
     layout = kw.pop("layout", "auto")
+    if layout not in LAYOUTS:
+        raise ValueError(f"layout must be one of {LAYOUTS}: {layout!r}")
     if layout == "bucketed":
         raise ValueError(
             f"mechanism {mechanism!r} is closed-form and runs no sweep to "

@@ -303,6 +303,8 @@ def _solve_core(demands, capacities, weights, gamma, x0, mode, max_rounds,
     scale = jnp.maximum(1.0, gamma.max() if scale is None else scale)
     k = gamma.shape[1]
     sweep = jnp.arange(k, dtype=jnp.int32) if servers is None else servers
+    if mode not in ("rdm", "tdm"):
+        raise ValueError(f"mode must be 'rdm' or 'tdm': {mode!r}")
     if fill not in ("event", "bisect"):
         raise ValueError(f"fill must be 'event' or 'bisect': {fill!r}")
     if round_mode not in ("gauss", "jacobi"):
@@ -391,6 +393,8 @@ def _solve_core_bucketed(demands, capacities, weights, gamma, x0, idx, mask,
     n, k = gamma.shape
     dt = x0.dtype
     sweep = jnp.arange(k, dtype=jnp.int32) if servers is None else servers
+    if mode not in ("rdm", "tdm"):
+        raise ValueError(f"mode must be 'rdm' or 'tdm': {mode!r}")
     if fill not in ("event", "bisect"):
         raise ValueError(f"fill must be 'event' or 'bisect': {fill!r}")
     if round_mode not in ("gauss", "jacobi"):

@@ -73,8 +73,6 @@ class ChurnRecord:
     layout_rebuilds: int = 0  # bucket rebuilds this step (arrivals outside
     #                           the layout rebuild loudly; departures only
     #                           mask buckets in place)
-    servers_skipped: int = 0  # active-set skips (numpy sweep only; the
-    #                           jitted resolve always sweeps every server)
 
 
 #: sweep-based mechanisms the simulator can maintain a fixed point for
@@ -127,7 +125,7 @@ class ChurnSimulator:
                  layout: str = "auto"):
         import jax.numpy as jnp
 
-        from repro.core.layout import resolve_layout
+        from repro.core.layout import LAYOUTS, resolve_layout
         from repro.core.placement import FILL_ENGINES, get_placement
 
         if mode is not None and mechanism is not None:
@@ -135,7 +133,7 @@ class ChurnSimulator:
                 "pass either the legacy mode= alias or mechanism=, not both")
         if mode is not None:
             if mode not in ("rdm", "tdm"):
-                raise ValueError(mode)
+                raise ValueError(f"mode must be 'rdm' or 'tdm': {mode!r}")
             mechanism = f"psdsf-{mode}"
         if mechanism is None:
             mechanism = "psdsf-rdm"
@@ -177,6 +175,8 @@ class ChurnSimulator:
         # layout never saw rebuild it (loudly — counted per record)
         routed = (placement == "headroom"
                   and mechanism not in ("psdsf-rdm", "psdsf-tdm"))
+        if layout not in LAYOUTS:
+            raise ValueError(f"layout must be one of {LAYOUTS}: {layout!r}")
         if routed and layout == "bucketed":
             raise ValueError(
                 "layout='bucketed' needs the per-server sweep; the routed "
