@@ -25,7 +25,15 @@ Reads a ``benchmarks/run.py --json``/``--out`` artifact and fails when:
     pinned ~20k x 256 @ ~3%-density instance AND a dense-parity
     ``maxdiff`` within ``SPARSE_PARITY_ATOL`` (1e-9) — the PR-8
     acceptance, same shape as the fill gate: speed is never bought with
-    exactness. The numpy active-set row is parity-gated only.
+    exactness. The numpy active-set row is parity-gated only;
+  * the ``convergence_comparison`` self-certification fails: on the two
+    limit-cycling instance rows (``ACCEL_ROUND_ROWS``) the Anderson engine
+    must certify (``cert=1``) within ``ACCEL_MAX_ROUND_RATIO`` (0.5x) of
+    the plain sweep's rounds, and on the converging ``convcmp_parity``
+    row the two engines' fixed points must agree to ``ACCEL_PARITY_ATOL``
+    (1e-9) — the ISSUE-10 acceptance: acceleration buys rounds on the
+    instances the damping schedule cannot close, and never moves the
+    answer where the sweep already converges.
 
 A delta table (baseline us, measured us, ratio, verdict) is always
 printed, gate outcome aside, so the perf trajectory is legible from the
@@ -66,6 +74,18 @@ SPARSE_SPEED_ROW = "sparse_jit_bucketed"
 SPARSE_MIN_SPEEDUP = 3.0
 SPARSE_PARITY_ATOL = 1e-9
 SPARSE_PARITY_ROWS = (SPARSE_SPEED_ROW, "sparse_numpy_bucketed")
+
+#: convergence_comparison acceptance (the ISSUE-10 headline): on the two
+#: limit-cycling instances the Anderson engine must CERTIFY at the tight
+#: tolerance (cert=1) in <= half the plain sweep's rounds (round_ratio=);
+#: on the converging worked example its fixed point must match the plain
+#: sweep's to 1e-9 (maxdiff=) — acceleration never moves the answer. The
+#: sparse row is deliberately ungated: it converges plainly, so Anderson
+#: is bookkept there as safeguard overhead, not a win.
+ACCEL_ROUND_ROWS = ("convcmp_dense_anderson", "convcmp_cell_anderson")
+ACCEL_MAX_ROUND_RATIO = 0.5
+ACCEL_PARITY_ROW = "convcmp_parity"
+ACCEL_PARITY_ATOL = 1e-9
 
 
 def _parse(derived: str, field: str) -> float | None:
@@ -157,6 +177,40 @@ def main(argv=None) -> int:
                 f"{name}: bucketed/dense fixed points differ by "
                 f"{maxdiff:.2e} (gate: <= {SPARSE_PARITY_ATOL})")
 
+    # --- Anderson-accel self-certification (rounds AND parity) -----------
+    for name in ACCEL_ROUND_ROWS:
+        d = derived.get(name)
+        if d is None:
+            failures.append(f"missing convergence-comparison row {name}")
+            continue
+        ratio = _parse(d, "round_ratio")
+        cert = _parse(d, "cert")
+        if ratio is None or cert is None:
+            failures.append(f"{name}: derived lacks round_ratio=/cert= "
+                            f"({d!r})")
+            continue
+        if cert != 1:
+            failures.append(
+                f"{name}: Anderson failed to certify at the tight tol on a "
+                f"limit-cycling instance (cert={cert:.0f})")
+        if ratio > ACCEL_MAX_ROUND_RATIO:
+            failures.append(
+                f"{name}: Anderson used {ratio:.2f}x the plain sweep's "
+                f"rounds (gate: <= {ACCEL_MAX_ROUND_RATIO}x)")
+    d = derived.get(ACCEL_PARITY_ROW)
+    if d is None:
+        failures.append(f"missing accel-parity row {ACCEL_PARITY_ROW}")
+    else:
+        maxdiff = _parse(d, "maxdiff")
+        if maxdiff is None:
+            failures.append(f"{ACCEL_PARITY_ROW}: derived lacks maxdiff= "
+                            f"({d!r})")
+        elif not math.isfinite(maxdiff) or maxdiff > ACCEL_PARITY_ATOL:
+            failures.append(
+                f"{ACCEL_PARITY_ROW}: accelerated/plain fixed points differ "
+                f"by {maxdiff:.2e} on a converging instance "
+                f"(gate: <= {ACCEL_PARITY_ATOL})")
+
     if failures:
         print("perf gate FAILED:")
         for f in failures:
@@ -167,7 +221,10 @@ def main(argv=None) -> int:
           f">= {FILL_MIN_SPEEDUP}x and event-exact to {FILL_PARITY_ATOL} "
           f"on {len(FILL_PARITY_ROWS)} rows; bucketed engine >= "
           f"{SPARSE_MIN_SPEEDUP}x and dense-exact to {SPARSE_PARITY_ATOL} "
-          f"on {len(SPARSE_PARITY_ROWS)} rows")
+          f"on {len(SPARSE_PARITY_ROWS)} rows; Anderson certifies in <= "
+          f"{ACCEL_MAX_ROUND_RATIO}x plain rounds on "
+          f"{len(ACCEL_ROUND_ROWS)} limit-cycling rows and matches the "
+          f"plain fixed point to {ACCEL_PARITY_ATOL} where it converges")
     return 0
 
 

@@ -26,9 +26,9 @@ Axis-spec schema (one row per entry point, one cell per axis):
 """
 from __future__ import annotations
 
-#: the seven hand-threaded engine axes (ROADMAP PRs 1-8)
+#: the eight hand-threaded engine axes (ROADMAP PRs 1-10)
 AXES = ("mechanism", "backend", "placement", "fill", "round", "layout",
-        "precision")
+        "precision", "accel")
 
 #: every registered allocator — ``engine.solve``/``sched`` dispatch through
 #: ``get_allocator`` (a statically unresolvable registry call), so the axis
@@ -60,6 +60,9 @@ ENTRY_POINTS = {
                        sinks=_ALLOCATOR_SINKS + ("_solve_psdsf_via_jax",
                                                  "solve_baseline_jax")),
         "precision": _F64,
+        "accel": dict(via="kwargs", forward=True,
+                      sinks=_ALLOCATOR_SINKS + ("_solve_psdsf_via_jax",
+                                                "solve_baseline_jax")),
     },
     ("src/repro/core/psdsf.py", "solve_psdsf_rdm"): {
         "mechanism": "n/a — this function IS psdsf-rdm; mechanism choice "
@@ -71,6 +74,7 @@ ENTRY_POINTS = {
                  "engine.solve rejects round!='gauss' before dispatch",
         "layout": dict(forward=True),
         "precision": _F64,
+        "accel": dict(forward=True),
     },
     ("src/repro/core/psdsf.py", "solve_psdsf_tdm"): {
         "mechanism": "n/a — this function IS psdsf-tdm; mechanism choice "
@@ -82,6 +86,7 @@ ENTRY_POINTS = {
                  "engine.solve rejects round!='gauss' before dispatch",
         "layout": dict(forward=True),
         "precision": _F64,
+        "accel": dict(forward=True),
     },
     ("src/repro/core/baselines.py", "solve_level_fill"): {
         "mechanism": "n/a — takes the prebuilt level-rate matrix; the "
@@ -92,6 +97,7 @@ ENTRY_POINTS = {
         "round": "n/a — numpy sweep, Gauss-Seidel by construction",
         "layout": dict(forward=True),
         "precision": _F64,
+        "accel": dict(forward=True),
     },
     ("src/repro/core/baselines.py", "solve_cdrfh"): {
         "mechanism": "n/a — this function IS cdrfh (re-validated by "
@@ -102,6 +108,7 @@ ENTRY_POINTS = {
         "round": "n/a — numpy sweep, Gauss-Seidel by construction",
         "layout": dict(via="kwargs", forward=True),
         "precision": _F64,
+        "accel": dict(via="kwargs", forward=True),
     },
     ("src/repro/core/baselines.py", "solve_tsf"): {
         "mechanism": "n/a — this function IS tsf (re-validated by "
@@ -112,6 +119,7 @@ ENTRY_POINTS = {
         "round": "n/a — numpy sweep, Gauss-Seidel by construction",
         "layout": dict(via="kwargs", forward=True),
         "precision": _F64,
+        "accel": dict(via="kwargs", forward=True),
     },
     ("src/repro/core/baselines.py", "solve_cdrf"): {
         "mechanism": "n/a — this function IS cdrf (re-validated by "
@@ -122,6 +130,7 @@ ENTRY_POINTS = {
         "round": "n/a — numpy sweep, Gauss-Seidel by construction",
         "layout": dict(via="kwargs", forward=True),
         "precision": _F64,
+        "accel": dict(via="kwargs", forward=True),
     },
     ("src/repro/core/psdsf_jax.py", "psdsf_solve_jax"): {
         "mechanism": dict(param="mode", forward=True),
@@ -132,6 +141,7 @@ ENTRY_POINTS = {
         "layout": dict(forward=True),
         "precision": "n/a — dtype follows the input arrays (_solve_dtype); "
                      "there is no precision knob on the batch solves",
+        "accel": dict(forward=True),
     },
     ("src/repro/core/psdsf_jax.py", "psdsf_solve_batched"): {
         "mechanism": dict(param="mode", forward=True),
@@ -141,6 +151,7 @@ ENTRY_POINTS = {
         "round": dict(forward=True),
         "layout": dict(forward=True),
         "precision": "n/a — dtype follows the input arrays (_solve_dtype)",
+        "accel": dict(forward=True),
     },
     ("src/repro/core/psdsf_jax.py", "psdsf_resolve_batched"): {
         "mechanism": dict(param="mode", forward=True),
@@ -150,6 +161,7 @@ ENTRY_POINTS = {
         "round": dict(forward=True),
         "layout": dict(forward=True),
         "precision": "n/a — dtype follows the input arrays (_solve_dtype)",
+        "accel": dict(forward=True),
     },
     ("src/repro/core/baselines_jax.py", "baseline_solve_jax"): {
         "mechanism": "n/a — takes the prebuilt level-rate matrix; build it "
@@ -160,6 +172,7 @@ ENTRY_POINTS = {
         "round": dict(forward=True),
         "layout": dict(forward=True),
         "precision": "n/a — dtype follows the input arrays (_solve_dtype)",
+        "accel": dict(forward=True),
     },
     ("src/repro/core/baselines_jax.py", "baseline_solve_batched"): {
         "mechanism": "n/a — takes the prebuilt level-rate matrix; build it "
@@ -170,6 +183,7 @@ ENTRY_POINTS = {
         "round": dict(forward=True),
         "layout": dict(forward=True),
         "precision": "n/a — dtype follows the input arrays (_solve_dtype)",
+        "accel": dict(forward=True),
     },
     ("src/repro/core/baselines_jax.py", "solve_baseline_jax"): {
         "mechanism": dict(forward=True),
@@ -179,6 +193,7 @@ ENTRY_POINTS = {
         "round": dict(forward=True),
         "layout": dict(forward=True),
         "precision": "n/a — dtype follows the input arrays (_solve_dtype)",
+        "accel": dict(forward=True),
     },
     ("src/repro/core/dynamic.py", "DistributedPSDSF.__init__"): {
         "mechanism": dict(param="mode", forward=False),
@@ -189,6 +204,7 @@ ENTRY_POINTS = {
                  "is no outer iteration to choose",
         "layout": dict(forward=True),
         "precision": dict(forward=False),
+        "accel": dict(forward=False),
     },
     ("src/repro/sched/serving.py", "DynamicDispatcher.__init__"): {
         "mechanism": dict(param="mode", forward=True),
@@ -199,6 +215,7 @@ ENTRY_POINTS = {
                  "outer iteration",
         "layout": dict(forward=True),
         "precision": dict(forward=True),
+        "accel": dict(forward=True),
     },
     ("src/repro/sched/churn.py", "ChurnSimulator.__init__"): {
         "mechanism": dict(forward=False),
@@ -209,6 +226,7 @@ ENTRY_POINTS = {
         "layout": dict(forward=True),
         "precision": "n/a — the tick engine runs float32 buffers by design "
                      "(10^3-user churn scale)",
+        "accel": dict(forward=False),
     },
     ("src/repro/sched/cluster.py", "schedule"): {
         "mechanism": dict(forward=True),
@@ -220,6 +238,7 @@ ENTRY_POINTS = {
                  "with a TypeError, closed-form ones validate it",
         "layout": dict(via="kwargs", forward=True, sinks=_ALLOCATOR_SINKS),
         "precision": _F64,
+        "accel": dict(via="kwargs", forward=True, sinks=_ALLOCATOR_SINKS),
     },
     ("src/repro/sched/cluster.py", "schedule_detail"): {
         "mechanism": dict(forward=True),
@@ -230,6 +249,7 @@ ENTRY_POINTS = {
                  "with a TypeError, closed-form ones validate it",
         "layout": dict(via="kwargs", forward=True, sinks=_ALLOCATOR_SINKS),
         "precision": _F64,
+        "accel": dict(via="kwargs", forward=True, sinks=_ALLOCATOR_SINKS),
     },
     ("src/repro/sched/serving.py", "admitted_rates"): {
         "mechanism": dict(forward=True),
@@ -240,6 +260,7 @@ ENTRY_POINTS = {
                  "with a TypeError, closed-form ones validate it",
         "layout": dict(via="kwargs", forward=True, sinks=_ALLOCATOR_SINKS),
         "precision": _F64,
+        "accel": dict(via="kwargs", forward=True, sinks=_ALLOCATOR_SINKS),
     },
 }
 
@@ -272,8 +293,8 @@ JIT_PURITY = dict(
     #: trace-time gates: host-side validation helpers that run during
     #: tracing on static (non-traced) arguments; excluded from the closure
     trace_time_gates=frozenset({
-        "_check_placement", "_check_buckets", "_reject_lexmm_traced",
-        "get_placement", "min"}),
+        "_check_placement", "_check_buckets", "_check_accel",
+        "_reject_lexmm_traced", "get_placement", "min"}),
     #: numpy attributes that are trace-safe constants/dtypes, not ops
     np_const_allow=frozenset({
         "inf", "nan", "pi", "e", "newaxis", "float32", "float64", "int32",

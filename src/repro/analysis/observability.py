@@ -25,8 +25,10 @@ from .model import RepoModel, call_base_name
 PASS_NAME = "observability"
 
 #: fields SolveInfo.from_residual derives itself from (rounds, resid,
-#: scale, tol, loose_tol) before forwarding **kw to the constructor
-_FROM_RESIDUAL_FIELDS = {"rounds", "converged", "residual", "approx"}
+#: scale, tol, loose_tol) before forwarding **kw to the constructor —
+#: rounds_to_tol is derived there too (rounds iff the tight tol certified)
+_FROM_RESIDUAL_FIELDS = {"rounds", "converged", "residual", "approx",
+                         "rounds_to_tol"}
 
 
 def _finding(code: str, file: str, line: int, symbol: str, msg: str,

@@ -106,6 +106,7 @@ def solve_level_fill(
     server_order: str = "fixed",
     fill: str = "event",
     layout: str = "auto",
+    accel: str = "none",
 ) -> tuple[Allocation, SolveInfo]:
     """Exact weighted max-min level fill with placement.
 
@@ -125,13 +126,15 @@ def solve_level_fill(
     servers, so using them would loosen the band ~linearly with K.
     ``layout`` selects the sweep's data layout (``"bucketed"`` = the
     O(nnz) active-set sweep, ``"auto"`` by density; dense-only on the
-    routed strategies) — see ``placement.solve_with_placement``.
+    routed strategies) and ``accel`` the outer-iteration accelerator
+    (``"anderson"`` = safeguarded Anderson mixing; sweep path only) — see
+    ``placement.solve_with_placement``.
     """
     return solve_with_placement(
         problem, level_gamma, placement=placement, mode="rdm",
         per_server_rates=False, scale=scale, x0=x0, max_rounds=max_rounds,
         tol=tol, loose_tol=loose_tol, adaptive_damping=adaptive_damping,
-        server_order=server_order, fill=fill, layout=layout)
+        server_order=server_order, fill=fill, layout=layout, accel=accel)
 
 
 def _solve_baseline(problem: AllocationProblem, mechanism: str,

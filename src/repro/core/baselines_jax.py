@@ -20,8 +20,9 @@ import numpy as np
 
 from .baselines import LEVEL_FILL_MECHANISMS, level_rate_matrix
 from .placement import ROUTED_FILL_CORRECTORS, SolveInfo, stranded_fraction
-from .psdsf_jax import (_BIG, _check_buckets, _check_placement, _solve_core,
-                        _solve_core_bucketed, _solve_dtype, gamma_matrix_jnp)
+from .psdsf_jax import (_BIG, _check_accel, _check_buckets, _check_placement,
+                        _solve_core, _solve_core_bucketed, _solve_dtype,
+                        gamma_matrix_jnp)
 from .types import Allocation, AllocationProblem
 
 _TOL = 1e-9
@@ -155,22 +156,25 @@ def _reject_lexmm_traced(placement: str) -> None:
 
 
 @functools.partial(jax.jit, static_argnames=("max_rounds", "placement",
-                                             "fill", "round", "layout"))
+                                             "fill", "round", "layout",
+                                             "accel"))
 def baseline_solve_jax(demands, capacities, weights, level_gamma, *, x0=None,
                        max_rounds: int = 256, tol: float = 1e-6,
                        placement: str = "level", fill: str = "event",
                        round: str = "gauss", layout: str = "dense",
-                       buckets=None):
+                       buckets=None, accel: str = "none"):
     """Solve one exact baseline fill. Returns (x (N,K), rounds, residual).
 
     ``level_gamma`` is the (N, K) level-rate matrix from
     ``level_rate_matrix`` / ``level_rate_matrix_jnp``. Warm-startable via
-    ``x0`` exactly like ``psdsf_solve_jax``; ``fill``/``round`` select the
-    per-server fill engine and outer iteration exactly like the PS-DSF
-    entry points (the solver body is shared). ``placement="headroom"`` runs
-    the routed global fill instead of the per-server sweep (one-shot exact;
-    ``x0``, the sweep knobs and the fill engine are ignored); ``"bestfit"``
-    is numpy-only; ``"lexmm"``'s flow certificates are LP solves with
+    ``x0`` exactly like ``psdsf_solve_jax``; ``fill``/``round``/``accel``
+    select the per-server fill engine, outer iteration and outer-iteration
+    accelerator exactly like the PS-DSF entry points (the solver body is
+    shared; ``accel="anderson"`` appends (accel_hits, accel_rejects)).
+    ``placement="headroom"`` runs the routed global fill instead of the
+    per-server sweep (one-shot exact; ``x0``, the sweep knobs and the fill
+    engine are ignored — the accel axis with it); ``"bestfit"`` is
+    numpy-only; ``"lexmm"``'s flow certificates are LP solves with
     data-dependent pivoting — there is nothing to trace, so this jitted
     entry point rejects it (``solve_baseline_jax`` routes it host-side
     instead).
@@ -178,12 +182,17 @@ def baseline_solve_jax(demands, capacities, weights, level_gamma, *, x0=None,
     _check_placement(placement)
     _reject_lexmm_traced(placement)
     _check_buckets(layout, buckets)
+    _check_accel(accel)
     if placement == "headroom":
         if layout == "bucketed":
             raise ValueError("layout='bucketed' needs the per-server sweep; "
                              "the routed headroom fill is one-shot global — "
                              "use layout='dense'")
-        return _routed_fill_core(demands, capacities, weights, level_gamma)
+        out = _routed_fill_core(demands, capacities, weights, level_gamma)
+        if accel == "anderson":     # one-shot fill: nothing to accelerate
+            zero = jnp.asarray(0, jnp.int32)
+            out = out + (zero, zero)
+        return out
     n, k = level_gamma.shape
     dtype = _solve_dtype(demands)
     if x0 is None:
@@ -194,26 +203,28 @@ def baseline_solve_jax(demands, capacities, weights, level_gamma, *, x0=None,
         return _solve_core_bucketed(demands, capacities, weights,
                                     level_gamma, x0.astype(dtype), idx, mask,
                                     "rdm", max_rounds, tol, scale=scale,
-                                    fill=fill, round_mode=round)
+                                    fill=fill, round_mode=round, accel=accel)
     return _solve_core(demands, capacities, weights, level_gamma,
                        x0.astype(dtype), "rdm", max_rounds, tol,
-                       scale=scale, fill=fill, round_mode=round)
+                       scale=scale, fill=fill, round_mode=round, accel=accel)
 
 
 @functools.partial(jax.jit, static_argnames=("max_rounds", "placement",
-                                             "fill", "round", "layout"))
+                                             "fill", "round", "layout",
+                                             "accel"))
 def baseline_solve_batched(demands, capacities, weights, level_gamma, *,
                            x0=None, max_rounds: int = 256, tol: float = 1e-6,
                            placement: str = "level", fill: str = "event",
                            round: str = "gauss", layout: str = "dense",
-                           buckets=None):
+                           buckets=None, accel: str = "none"):
     """Solve B independent baseline fills in one jitted vmap call.
 
     Shapes as ``psdsf_solve_batched``: demands (B, N, R), capacities
     (B, K, R), weights (B, N), level_gamma (B, N, K), optional x0 (B, N, K).
     Pad heterogeneous problems with ``psdsf_jax.batch_problems`` (padding is
     inert: padded users carry level rate 0, padded servers zero capacity).
-    ``placement``/``fill``/``round``/``layout`` as in ``baseline_solve_jax``
+    ``placement``/``fill``/``round``/``layout``/``accel`` as in
+    ``baseline_solve_jax``
     (``"lexmm"`` rejected: the flow certificates solve host-side); bucketed
     ``buckets`` are per-problem (B, K, Bmax) idx/mask stacks as for
     ``psdsf_solve_batched``.
@@ -221,6 +232,7 @@ def baseline_solve_batched(demands, capacities, weights, level_gamma, *,
     _check_placement(placement)
     _reject_lexmm_traced(placement)
     _check_buckets(layout, buckets)
+    _check_accel(accel)
     if placement == "headroom" and layout == "bucketed":
         raise ValueError("layout='bucketed' needs the per-server sweep; "
                          "the routed headroom fill is one-shot global — "
@@ -237,17 +249,22 @@ def baseline_solve_batched(demands, capacities, weights, level_gamma, *,
             return _solve_core_bucketed(d, c, w, lg, x0_, idx_, mask_,
                                         "rdm", max_rounds, tol,
                                         scale=_gamma_scale(d, c, lg),
-                                        fill=fill, round_mode=round)
+                                        fill=fill, round_mode=round,
+                                        accel=accel)
 
         return jax.vmap(solve_b)(demands, capacities, weights, level_gamma,
                                  x0.astype(dtype), idx, mask)
 
     def solve(d, c, w, lg, x0_):
         if placement == "headroom":
-            return _routed_fill_core(d, c, w, lg)
+            out = _routed_fill_core(d, c, w, lg)
+            if accel == "anderson":
+                zero = jnp.asarray(0, jnp.int32)
+                out = out + (zero, zero)
+            return out
         return _solve_core(d, c, w, lg, x0_, "rdm", max_rounds, tol,
                            scale=_gamma_scale(d, c, lg), fill=fill,
-                           round_mode=round)
+                           round_mode=round, accel=accel)
 
     return jax.vmap(solve)(demands, capacities, weights, level_gamma,
                            x0.astype(dtype))
@@ -269,13 +286,13 @@ def solve_baseline_jax(problem: AllocationProblem, mechanism: str, x0=None,
                        max_rounds: int = 256, tol: float = 1e-6,
                        loose_tol: float = 5e-3, placement: str = "level",
                        fill: str = "event", round: str = "gauss",
-                       layout: str = "auto"
+                       layout: str = "auto", accel: str = "none"
                        ) -> tuple[Allocation, SolveInfo]:
     """Convenience wrapper with the same container/contract as the numpy
-    baseline solvers (``solve_tsf`` & co.); ``fill``/``round`` thread to
-    the shared jitted sweep and ``layout`` resolves host-side exactly like
-    ``engine.solve`` (bucketed applies to the level sweep only; routed /
-    lexmm placements fall back dense under ``"auto"`` and reject an
+    baseline solvers (``solve_tsf`` & co.); ``fill``/``round``/``accel``
+    thread to the shared jitted sweep and ``layout`` resolves host-side
+    exactly like ``engine.solve`` (bucketed applies to the level sweep only;
+    routed / lexmm placements fall back dense under ``"auto"`` and reject an
     explicit ``"bucketed"``).
 
     ``placement="lexmm"`` is honored here by running the exact flow router
@@ -289,6 +306,7 @@ def solve_baseline_jax(problem: AllocationProblem, mechanism: str, x0=None,
 
     g = gamma_matrix(problem)    # computed once: level rates AND scale
     lg = level_rate_matrix(problem, mechanism, gamma=g)
+    _check_accel(accel)
     swept_placement = placement not in ("headroom", "lexmm")
     if not swept_placement:
         if layout == "bucketed":
@@ -314,15 +332,18 @@ def solve_baseline_jax(problem: AllocationProblem, mechanism: str, x0=None,
         x, stages = lexmm_route(problem, lg)
         return (Allocation(problem, x),
                 SolveInfo(stages, True, 0.0, placement="lexmm",
-                          fill_engine="",
+                          fill_engine="", accel=accel,
                           stranded_frac=stranded_fraction(problem, x,
                                                           gamma=g)))
-    x, rounds, resid = baseline_solve_jax(
+    out = baseline_solve_jax(
         jnp.asarray(problem.demands), jnp.asarray(problem.capacities),
         jnp.asarray(problem.weights), jnp.asarray(lg),
         x0=None if x0 is None else jnp.asarray(x0), max_rounds=max_rounds,
         tol=tol, placement=placement, fill=fill, round=round,
-        layout=resolved, buckets=buckets)
+        layout=resolved, buckets=buckets, accel=accel)
+    x, rounds, resid = out[0], out[1], out[2]
+    hits, rejects = (int(out[3]), int(out[4])) if accel == "anderson" \
+        else (0, 0)
     x = np.asarray(x, dtype=np.float64)
     swept = placement != "headroom"          # routed fill: no per-server fill
     return (Allocation(problem, x),
@@ -338,4 +359,6 @@ def solve_baseline_jax(problem: AllocationProblem, mechanism: str, x0=None,
                                                     problem.num_resources,
                                                     "rdm", fill)
                                                 if swept else 0),
-                                    layout=resolved, bucket_max=bucket_max))
+                                    layout=resolved, bucket_max=bucket_max,
+                                    accel=accel, accel_hits=hits,
+                                    accel_rejects=rejects))

@@ -158,14 +158,25 @@ class DistributedPSDSF:
     outside a bucket have gamma 0 and always fill to zero); ``"auto"``
     (default) picks by support density. Resolved layout and bucket size
     are exposed as ``self.layout`` / ``self.bucket_max``.
+
+    ``accel`` mirrors the batch solvers' outer-iteration axis at the tick
+    layer: ``"anderson"`` runs host-side safeguarded Anderson mixing ACROSS
+    consecutive synchronous full ticks (``tick()`` with no server subset and
+    no shuffle) — each mixed candidate is certified by a second full tick
+    and accepted only if it shrinks the tick residual, so state after
+    ``tick()`` is always the output of a genuine server-procedure round.
+    Partial/shuffled ticks and ``set_active`` churn restart the mixing
+    history (the map being accelerated changed); accepted/rejected
+    candidates are counted on ``self.accel_hits`` / ``self.accel_rejects``.
     """
 
     def __init__(self, problem: AllocationProblem, mode: str = "rdm",
                  seed: int = 0, engine: str = "numpy",
                  precision: str = "highest", placement: str = "level",
-                 fill: str = "event", layout: str = "auto"):
+                 fill: str = "event", layout: str = "auto",
+                 accel: str = "none"):
         from .layout import BucketedLayout, resolve_layout
-        from .placement import FILL_ENGINES, get_placement
+        from .placement import ACCEL_ENGINES, FILL_ENGINES, get_placement
 
         if mode not in ("rdm", "tdm"):
             raise ValueError(f"mode must be 'rdm' or 'tdm': {mode!r}")
@@ -176,12 +187,20 @@ class DistributedPSDSF:
                 f"precision must be 'highest' or 'fast': {precision!r}")
         if fill not in FILL_ENGINES:
             raise ValueError(f"fill must be one of {FILL_ENGINES}: {fill}")
+        if accel not in ACCEL_ENGINES:
+            raise ValueError(f"accel must be one of {ACCEL_ENGINES}: "
+                             f"{accel!r}")
         get_placement(placement)               # unknown strategies fail fast
         self.problem = problem
         self.mode = mode
         self.engine = engine
         self.fill = fill
         self.placement = placement
+        self.accel = accel
+        self.accel_hits = 0
+        self.accel_rejects = 0
+        self._hist_f: list = []      # tick-to-tick Anderson history
+        self._hist_g: list = []
         self.gamma = gamma_matrix(problem)
         self.layout = resolve_layout(layout, support=self.gamma)
         self.x = np.zeros((problem.num_users, problem.num_servers))
@@ -233,25 +252,47 @@ class DistributedPSDSF:
 
     # -- churn -------------------------------------------------------------
     def set_active(self, user: int, active: bool) -> None:
-        """Arrival/departure: departures also release the user's tasks."""
+        """Arrival/departure: departures also release the user's tasks.
+        Churn changes the tick map, so the Anderson history restarts."""
         self.active[user] = active
         if not active:
             self.x[user, :] = 0.0      # departing user releases its tasks
+        self._hist_f = []
+        self._hist_g = []
 
     # -- the per-server procedure -------------------------------------------
     def tick(self, servers: Optional[Iterable[int]] = None,
              shuffle: bool = False) -> None:
         """One asynchronous round of Algorithm 1: each listed server (all
-        by default) runs its local PS-DSF procedure against current state."""
+        by default) runs its local PS-DSF procedure against current state.
+
+        Under ``accel="anderson"`` a synchronous full tick additionally
+        mixes the tick-to-tick history (safeguarded by a second full tick,
+        see the class docstring); partial or shuffled visits tick plainly
+        and restart the history."""
         p = self.problem
-        idx: Sequence[int] = (range(p.num_servers) if servers is None
-                              else list(servers))
+        full = servers is None and not shuffle
+        idx: Sequence[int] = list(range(p.num_servers) if servers is None
+                                  else servers)
         if shuffle:
-            idx = list(idx)
             self._rng.shuffle(idx)
+        if self.accel == "anderson" and full:
+            self._tick_anderson(idx)
+        else:
+            if self.accel == "anderson":
+                # the mixing history models the synchronous full-tick map;
+                # an asynchronous visit changes that map — restart
+                self._hist_f = []
+                self._hist_g = []
+            self._tick_once(idx)
+        self._repack_if_routed()
+
+    def _tick_once(self, idx: Sequence[int]) -> None:
+        """One plain visit sequence (no repack, no mixing) — the map the
+        Anderson layer accelerates and the safeguard certifies with."""
+        p = self.problem
         if self.engine == "jax":
             self._tick_with_jax(np.asarray(list(idx), dtype=np.int32))
-            self._repack_if_routed()
             return
         # Row sums feeding the external floors are maintained incrementally:
         # one O(NK) reduction per tick, O(N) updates per server after that.
@@ -275,7 +316,6 @@ class DistributedPSDSF:
                     xi = f(self._dem_b[i], self._phi_b[i], gamma_i, x_ext)
                 xsum[u] += xi - self.x[u, i]
                 self.x[u, i] = xi
-            self._repack_if_routed()
             return
         for i in idx:
             gamma_i = np.where(self.active, self.gamma[:, i], 0.0)
@@ -288,7 +328,50 @@ class DistributedPSDSF:
                 xi = f(p.demands, p.weights, gamma_i, x_ext)
             xsum += xi - self.x[:, i]
             self.x[:, i] = xi
-        self._repack_if_routed()
+
+    def _tick_anderson(self, idx: Sequence[int]) -> None:
+        """Host-side safeguarded Anderson mixing across full ticks — the
+        asynchronous analogue of ``placement._anderson_fixed_point``. One
+        plain tick always runs first; a mixed candidate (numpy lstsq over
+        the tick-to-tick difference history) is evaluated by a SECOND full
+        tick and kept only if that tick's residual beats the plain one, so
+        ``self.x`` always ends on the output of a real server-procedure
+        round and a rejected candidate costs progress, never exactness."""
+        from .placement import ANDERSON_MEMORY
+
+        x_prev = self.x.copy()
+        self._tick_once(idx)
+        g = self.x.copy()
+        resid = float(np.abs(g - x_prev).max())
+        f = (g - x_prev).ravel()
+        self._hist_f.append(f)
+        self._hist_g.append(g.ravel())
+        if len(self._hist_f) > ANDERSON_MEMORY + 1:
+            self._hist_f.pop(0)
+            self._hist_g.pop(0)
+        if len(self._hist_f) < 2 or resid == 0.0:
+            return
+        hf, hg = self._hist_f, self._hist_g
+        df = np.stack([hf[j + 1] - hf[j] for j in range(len(hf) - 1)], axis=1)
+        dg = np.stack([hg[j + 1] - hg[j] for j in range(len(hg) - 1)], axis=1)
+        theta, *_ = np.linalg.lstsq(df, f, rcond=None)
+        cand = np.maximum(hg[-1] - dg @ theta, 0.0).reshape(self.x.shape)
+        self.x = cand.copy()
+        self._tick_once(idx)                 # safeguard evaluation tick
+        g_c = self.x.copy()
+        resid_c = float(np.abs(g_c - cand).max())
+        if np.isfinite(resid_c) and resid_c < resid:
+            self.accel_hits += 1
+            self._hist_f.append((g_c - cand).ravel())
+            self._hist_g.append(g_c.ravel())
+            if len(self._hist_f) > ANDERSON_MEMORY + 1:
+                self._hist_f.pop(0)
+                self._hist_g.pop(0)
+        else:
+            self.accel_rejects += 1
+            self.x = g                       # fall back to the plain tick
+            self._hist_f = [f]
+            self._hist_g = [g.ravel()]
 
     def _repack_if_routed(self) -> None:
         """headroom/bestfit: one totals-preserving repack per tick (see the

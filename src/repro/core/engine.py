@@ -45,7 +45,7 @@ from typing import Callable, Dict, Protocol, Tuple
 from .baselines import (solve_cdrf, solve_cdrfh, solve_drf_pooled, solve_tsf,
                         uniform_allocation)
 from .layout import LAYOUTS
-from .placement import get_placement, stranded_fraction
+from .placement import ACCEL_ENGINES, get_placement, stranded_fraction
 from .psdsf import SolveInfo, solve_psdsf_rdm, solve_psdsf_tdm
 from .types import Allocation, AllocationProblem
 
@@ -163,6 +163,14 @@ def _reject_placement(kw: dict, mechanism: str) -> None:
         raise ValueError(
             f"mechanism {mechanism!r} is closed-form and runs no sweep to "
             f"bucket; only layout='dense'/'auto' are accepted")
+    accel = kw.pop("accel", "none")
+    if accel not in ACCEL_ENGINES:
+        raise ValueError(f"accel must be one of {ACCEL_ENGINES}: {accel!r}")
+    if accel != "none":
+        raise ValueError(
+            f"mechanism {mechanism!r} is closed-form and runs no outer "
+            f"iteration to accelerate; only accel='none' is accepted, got "
+            f"{accel!r}")
 
 
 def solve(problem: AllocationProblem, mechanism: str = "psdsf-rdm",
@@ -172,9 +180,12 @@ def solve(problem: AllocationProblem, mechanism: str = "psdsf-rdm",
 
     Sweep mechanisms additionally accept ``fill="event"|"bisect"`` (the
     per-server fill engine — same fixed point, see
-    ``placement.server_fill_rdm_bisect``) and, on the jax backend,
+    ``placement.server_fill_rdm_bisect``), ``accel="none"|"anderson"``
+    (the safeguarded outer-iteration accelerator, see
+    ``placement._anderson_fixed_point`` / ``psdsf_jax._anderson_rounds`` —
+    same fixed point, fewer sweeps) and, on the jax backend,
     ``round="gauss"|"jacobi"`` (the outer iteration, see
-    ``psdsf_jax._solve_core``); closed-form mechanisms reject both.
+    ``psdsf_jax._solve_core``); closed-form mechanisms reject all three.
 
     ``placement`` selects the routing strategy for sweep mechanisms (see
     ``core.placement``); the jax backend accepts the strategies flagged
@@ -218,7 +229,7 @@ def _solve_psdsf_via_jax(problem: AllocationProblem, mechanism: str, x0=None,
                          max_rounds: int = 256, tol: float = 1e-6,
                          loose_tol: float = 5e-3, placement: str = "level",
                          fill: str = "event", round: str = "gauss",
-                         layout: str = "auto"
+                         layout: str = "auto", accel: str = "none"
                          ) -> Tuple[Allocation, SolveInfo]:
     import jax.numpy as jnp
     import numpy as np
@@ -239,12 +250,16 @@ def _solve_psdsf_via_jax(problem: AllocationProblem, mechanism: str, x0=None,
         blayout = BucketedLayout.from_support(g > 0)
         buckets = (jnp.asarray(blayout.indices), jnp.asarray(blayout.mask))
         bucket_max = blayout.bucket_max
-    x, rounds, resid = psdsf_solve_jax(
+    out = psdsf_solve_jax(
         jnp.asarray(problem.demands), jnp.asarray(problem.capacities),
         jnp.asarray(problem.weights), jnp.asarray(g),
         x0=None if x0 is None else jnp.asarray(x0),
         mode=mode, max_rounds=max_rounds, tol=tol, placement=placement,
-        fill=fill, round=round, layout=resolved, buckets=buckets)
+        fill=fill, round=round, layout=resolved, buckets=buckets,
+        accel=accel)
+    x, rounds, resid = out[0], out[1], out[2]
+    hits, rejects = (int(out[3]), int(out[4])) if accel == "anderson" \
+        else (0, 0)
     x = np.asarray(x, dtype=np.float64)
     return (Allocation(problem, x),
             SolveInfo.from_residual(int(rounds), float(resid),
@@ -257,4 +272,6 @@ def _solve_psdsf_via_jax(problem: AllocationProblem, mechanism: str, x0=None,
                                     problem.num_servers *
                                     fill_iter_budget(problem.num_resources,
                                                      mode, fill),
-                                    layout=resolved, bucket_max=bucket_max))
+                                    layout=resolved, bucket_max=bucket_max,
+                                    accel=accel, accel_hits=hits,
+                                    accel_rejects=rejects))

@@ -98,6 +98,19 @@ BISECT_STEPS_F32 = 26
 #: ``server_fill_rdm_bisect``); the jitted mirrors accept the same names
 FILL_ENGINES = ("event", "bisect")
 
+#: outer-iteration acceleration engines (see ``sweep_fixed_point``);
+#: "none" is the historical damped sweep, "anderson" wraps it in
+#: safeguarded limited-memory Anderson mixing. The jitted mirrors in
+#: ``psdsf_jax`` accept the same names.
+ACCEL_ENGINES = ("none", "anderson")
+
+#: Anderson history depth m: secant directions kept by the type-II mixer.
+#: 5 is the standard limited-memory sweet spot — deep enough to span the
+#: 2-4 dominant modes of the sweep's limit cycles, shallow enough that the
+#: least-squares stays well-conditioned without regularization. The jitted
+#: fixed-shape rolling buffers use the same constant — keep them in sync.
+ANDERSON_MEMORY = 5
+
 
 # ---------------------------------------------------------------------------
 # SolveInfo: the uniform solve contract (placement + convergence + waste)
@@ -129,6 +142,10 @@ class SolveInfo:
     layout: str = "dense"    # solve layout ("dense" / "bucketed")
     bucket_max: int = 0      # padded bucket width Bmax (bucketed only)
     servers_skipped: int = 0  # active-set sweep skips (bucketed numpy only)
+    accel: str = "none"      # outer-iteration accelerator ("none"/"anderson")
+    accel_hits: int = 0      # Anderson mixed steps accepted by the safeguard
+    accel_rejects: int = 0   # mixed steps rejected (fell back to plain step)
+    rounds_to_tol: int = 0   # first round meeting the tight tol (0 if never)
 
     @classmethod
     def from_residual(cls, rounds: int, residual: float, scale: float,
@@ -137,7 +154,9 @@ class SolveInfo:
                       stranded_frac: float = float("nan"),
                       fill_engine: str = "event",
                       fill_iters: int = 0, layout: str = "dense",
-                      bucket_max: int = 0) -> "SolveInfo":
+                      bucket_max: int = 0, accel: str = "none",
+                      accel_hits: int = 0,
+                      accel_rejects: int = 0) -> "SolveInfo":
         """The acceptance contract applied to a raw (rounds, residual) pair
         — the single place the tight/loose bands are derived, shared by the
         jitted solver wrappers so the psdsf and baseline paths cannot
@@ -148,7 +167,9 @@ class SolveInfo:
         return cls(rounds, converged or approx, residual, approx=approx,
                    placement=placement, stranded_frac=stranded_frac,
                    fill_engine=fill_engine, fill_iters=fill_iters,
-                   layout=layout, bucket_max=bucket_max)
+                   layout=layout, bucket_max=bucket_max, accel=accel,
+                   accel_hits=accel_hits, accel_rejects=accel_rejects,
+                   rounds_to_tol=rounds if converged else 0)
 
 
 # ---------------------------------------------------------------------------
@@ -528,6 +549,91 @@ def sweep_server_order(rounds: int, num_servers: int, server_order: str,
                      f"{server_order!r}")
 
 
+def _anderson_fixed_point(
+    step,                    # (x_flat, rounds, alpha) -> (g_flat, resid)
+    x0_flat: np.ndarray,
+    scale: float,
+    max_rounds: int,
+    tol: float,
+    adaptive_damping: bool,
+    memory: int = ANDERSON_MEMORY,
+) -> tuple[np.ndarray, int, float, int, int]:
+    """Safeguarded limited-memory type-II Anderson mixing on a sweep map.
+
+    ``step`` applies ONE full damped Gauss-Seidel round to a flattened
+    iterate and returns the new iterate plus its full-sweep residual (the
+    same map both numpy sweeps iterate). The mixer keeps an m-deep history
+    of (iterate, sweep result) pairs, solves the unconstrained
+    difference-form least squares ``min_theta ||f_t - dF theta||`` over the
+    residual-difference columns (``numpy.linalg.lstsq`` — the reference
+    discipline the jitted QR path mirrors), and proposes
+    ``x_cand = g_t - dG theta`` clipped to the feasible orthant.
+
+    Safeguard: the candidate is ACCEPTED only when one plain sweep from it
+    produces a smaller full-sweep residual than the plain step's — so the
+    residual the caller certifies against is always a genuine full-sweep
+    residual, never the mixer's extrapolated one, and a pathological
+    secant subspace can at worst cost the extra evaluation sweep, never
+    exactness. A rejected candidate restarts the history from the latest
+    plain pair (the subspace that produced it is stale by construction).
+    Every sweep — plain, or the candidate's safeguard evaluation — counts
+    one round, so rounds-to-tol comparisons against ``accel="none"`` are
+    sweep-for-sweep honest.
+
+    Returns ``(x_flat, rounds, resid, accel_hits, accel_rejects)``; the
+    caller applies the shared tight/loose acceptance bands.
+    """
+    x = np.array(x0_flat, dtype=np.float64)
+    alpha = 1.0
+    prev_resid = np.inf
+    resid = np.inf
+    hits = rejects = 0
+    hist_f: list = []        # residual vectors f_j = G(x_j) - x_j
+    hist_g: list = []        # sweep results g_j = G(x_j)
+    rounds = 0
+    while rounds < max_rounds:
+        rounds += 1
+        g, resid = step(x, rounds, alpha)
+        f = g - x
+        hist_f.append(f)
+        hist_g.append(g)
+        if len(hist_f) > memory + 1:
+            hist_f.pop(0)
+            hist_g.pop(0)
+        if resid <= tol * scale:
+            return g, rounds, resid, hits, rejects
+        x = g
+        if len(hist_f) >= 2 and rounds < max_rounds:
+            dF = np.stack([hist_f[j + 1] - hist_f[j]
+                           for j in range(len(hist_f) - 1)], axis=1)
+            dG = np.stack([hist_g[j + 1] - hist_g[j]
+                           for j in range(len(hist_g) - 1)], axis=1)
+            theta, *_ = np.linalg.lstsq(dF, f, rcond=None)
+            cand = np.maximum(g - dG @ theta, 0.0)
+            rounds += 1
+            g_c, resid_c = step(cand, rounds, alpha)
+            if np.isfinite(resid_c) and resid_c < resid:
+                hits += 1
+                x = g_c
+                resid = resid_c
+                hist_f.append(g_c - cand)
+                hist_g.append(g_c)
+                if len(hist_f) > memory + 1:
+                    hist_f.pop(0)
+                    hist_g.pop(0)
+                if resid <= tol * scale:
+                    return x, rounds, resid, hits, rejects
+            else:
+                rejects += 1
+                hist_f = [f]
+                hist_g = [g]
+        if (adaptive_damping and rounds >= 8
+                and resid > 0.98 * prev_resid and alpha > 0.15):
+            alpha *= 0.7
+        prev_resid = resid
+    return x, rounds, resid, hits, rejects
+
+
 def sweep_fixed_point(
     fill_server,             # (i, x_ext) -> x_i (N,), the per-server rebuild
     num_users: int,
@@ -540,6 +646,7 @@ def sweep_fixed_point(
     adaptive_damping: bool = True,
     server_order: str = "fixed",
     seed: int = 0,
+    accel: str = "none",
 ) -> tuple[np.ndarray, SolveInfo]:
     """Gauss-Seidel sweep of per-server rebuilds to a fixed point.
 
@@ -565,7 +672,19 @@ def sweep_fixed_point(
     ``fixed`` stalls just above it. ``random`` permutes every round (seeded)
     — useful as a probe, but its round-to-round order noise adds residual
     jitter of its own.
+
+    ``accel="anderson"`` wraps the damped sweep in safeguarded
+    limited-memory Anderson mixing (``_anderson_fixed_point``): the sweep
+    stays the fixed-point map, the mixer extrapolates along the residual
+    history, and a mixed step is accepted only when it DECREASES the
+    full-sweep residual — so the certified fixed point is the plain
+    sweep's (to mixing round-off), reached in fewer rounds, and the
+    limit-cycling instances that orbit forever under ``"none"`` contract
+    to certification. ``accel="none"`` (default) is byte-identical to the
+    historical loop.
     """
+    if accel not in ACCEL_ENGINES:
+        raise ValueError(f"accel must be one of {ACCEL_ENGINES}: {accel!r}")
     n, k = num_users, num_servers
     x = np.zeros((n, k)) if x0 is None else np.array(x0, dtype=np.float64)
     scale = max(1.0, scale)
@@ -573,17 +692,37 @@ def sweep_fixed_point(
     prev_resid = np.inf
     alpha = 1.0
     rng = np.random.default_rng(seed) if server_order == "random" else None
-    for rounds in range(1, max_rounds + 1):
-        x_prev = x.copy()
-        xsum = x.sum(axis=1)
+
+    def one_sweep(xs, rounds, a):
+        # one full Gauss-Seidel round in place; external floors via row
+        # sums maintained incrementally (one O(NK) reduction per round)
+        x_prev = xs.copy()
+        xsum = xs.sum(axis=1)
         for i in sweep_server_order(rounds, k, server_order, rng):
-            x_ext = xsum - x[:, i]
-            xi = (1.0 - alpha) * x[:, i] + alpha * fill_server(i, x_ext)
-            xsum += xi - x[:, i]
-            x[:, i] = xi
-        resid = float(np.abs(x - x_prev).max())
+            x_ext = xsum - xs[:, i]
+            xi = (1.0 - a) * xs[:, i] + a * fill_server(i, x_ext)
+            xsum += xi - xs[:, i]
+            xs[:, i] = xi
+        return float(np.abs(xs - x_prev).max())
+
+    if accel == "anderson":
+        def step(v, rounds, a):
+            xs = v.reshape(n, k).copy()
+            return xs.ravel(), one_sweep(xs, rounds, a)
+
+        xf, rounds, resid, hits, rejects = _anderson_fixed_point(
+            step, x.ravel(), scale, max_rounds, tol, adaptive_damping)
+        x = xf.reshape(n, k)
+        converged = resid <= tol * scale
+        approx = not converged and resid <= loose_tol * scale
+        return x, SolveInfo(rounds, converged or approx, resid,
+                            approx=approx, accel=accel, accel_hits=hits,
+                            accel_rejects=rejects,
+                            rounds_to_tol=rounds if converged else 0)
+    for rounds in range(1, max_rounds + 1):
+        resid = one_sweep(x, rounds, alpha)
         if resid <= tol * scale:
-            return x, SolveInfo(rounds, True, resid)
+            return x, SolveInfo(rounds, True, resid, rounds_to_tol=rounds)
         # only damp once the sweep has clearly stalled (paper instances
         # converge exactly within a handful of undamped rounds)
         if (adaptive_damping and rounds >= 8
@@ -605,6 +744,7 @@ def sweep_fixed_point_bucketed(
     adaptive_damping: bool = True,
     server_order: str = "fixed",
     seed: int = 0,
+    accel: str = "none",
 ) -> tuple[np.ndarray, SolveInfo]:
     """Bucketed + active-set twin of :func:`sweep_fixed_point`.
 
@@ -634,7 +774,15 @@ def sweep_fixed_point_bucketed(
     runs out. The reported residual is therefore always a full-sweep
     residual and ``ensure_converged`` behaves exactly as on the dense
     path — the skips buy speed, never exactness.
+
+    ``accel="anderson"`` (see :func:`sweep_fixed_point`) replaces the
+    active-set skips with safeguarded Anderson mixing over the packed
+    bucket vector: every round is a FULL round (so every residual —
+    including each safeguard evaluation — is a full-sweep residual and the
+    acceptance contract holds unchanged) and ``servers_skipped`` is 0.
     """
+    if accel not in ACCEL_ENGINES:
+        raise ValueError(f"accel must be one of {ACCEL_ENGINES}: {accel!r}")
     n, k = layout.num_users, layout.num_servers
     buckets = layout.bucket_lists()
     scale = max(1.0, scale)
@@ -646,6 +794,45 @@ def sweep_fixed_point_bucketed(
     else:
         x0 = np.asarray(x0, dtype=np.float64)
         xb = [x0[u, i] for i, u in enumerate(buckets)]
+    if accel == "anderson":
+        rng = np.random.default_rng(seed) if server_order == "random" else None
+        offs = np.zeros(k + 1, dtype=np.int64)
+        np.cumsum([u.size for u in buckets], out=offs[1:])
+
+        def step(v, rounds, a):
+            xb_l = [v[offs[i]:offs[i + 1]].copy() for i in range(k)]
+            xsum = np.zeros(n)
+            for i, u in enumerate(buckets):
+                xsum[u] += xb_l[i]
+            resid = 0.0
+            for i in sweep_server_order(rounds, k, server_order, rng):
+                u = buckets[i]
+                if u.size == 0:
+                    continue
+                x_ext = xsum[u] - xb_l[i]
+                f = fill_server(i, x_ext)
+                xi = f if a >= 1.0 else (1.0 - a) * xb_l[i] + a * f
+                delta = xi - xb_l[i]
+                resid = max(resid, float(np.abs(delta).max(initial=0.0)))
+                xsum[u] += delta
+                xb_l[i] = xi
+            return (np.concatenate(xb_l) if offs[-1] else np.zeros(0)), resid
+
+        v0 = np.concatenate(xb) if offs[-1] else np.zeros(0)
+        vf, rounds, resid, hits, rejects = _anderson_fixed_point(
+            step, v0, scale, max_rounds, tol, adaptive_damping)
+        converged = resid <= tol * scale
+        approx = not converged and resid <= loose_tol * scale
+        info = SolveInfo(rounds, converged or approx, resid, approx=approx,
+                         accel=accel, accel_hits=hits, accel_rejects=rejects,
+                         rounds_to_tol=rounds if converged else 0)
+        info.layout = "bucketed"
+        info.bucket_max = layout.bucket_max
+        info.servers_skipped = 0
+        x = np.zeros((n, k))
+        for i, u in enumerate(buckets):
+            x[u, i] = vf[offs[i]:offs[i + 1]]
+        return x, info
     xsum = np.zeros(n)
     for i, u in enumerate(buckets):
         xsum[u] += xb[i]
@@ -692,7 +879,7 @@ def sweep_fixed_point_bucketed(
             if alpha >= 1.0:
                 dirty[i] = False
         if visited_all and resid <= tol * scale:
-            info = SolveInfo(rounds, True, resid)
+            info = SolveInfo(rounds, True, resid, rounds_to_tol=rounds)
             break
         # a sub-tolerance partial round is only a CANDIDATE fixed point —
         # force the next round full so acceptance always verifies
@@ -1030,6 +1217,7 @@ def solve_with_placement(
     seed: int = 0,
     fill: str = "event",
     layout: str = "auto",
+    accel: str = "none",
 ) -> tuple[Allocation, SolveInfo]:
     """Solve one mechanism under one placement strategy.
 
@@ -1049,11 +1237,17 @@ def solve_with_placement(
     routed one-shot strategies have no sweep to bucket, so they run dense
     (an explicit ``"bucketed"`` there raises). The repack passes of
     ``headroom``/``bestfit`` stay dense — they are dominated by the dense
-    repack/stranded reductions, not the re-sweep. The returned
-    ``SolveInfo`` records the strategy, the fill engine and
-    inner-iteration count, the layout, and the stranded-capacity fraction.
+    repack/stranded reductions, not the re-sweep. ``accel`` selects the
+    outer-iteration accelerator wherever the sweep runs
+    (``"none"``/``"anderson"``, see ``sweep_fixed_point``); the one-shot
+    routed strategies have no outer iteration and record ``accel="none"``.
+    The returned ``SolveInfo`` records the strategy, the fill engine and
+    inner-iteration count, the accelerator and its hit/reject counters,
+    the layout, and the stranded-capacity fraction.
     """
     get_placement(placement)                       # validate early
+    if accel not in ACCEL_ENGINES:
+        raise ValueError(f"accel must be one of {ACCEL_ENGINES}: {accel!r}")
     level_gamma = np.asarray(level_gamma)
     resolved = resolve_layout(layout, support=level_gamma)
     sweeps = placement == "level" or per_server_rates
@@ -1068,7 +1262,7 @@ def solve_with_placement(
         scale = gamma_matrix(problem).max(initial=1.0)
     sweep_kw = dict(max_rounds=max_rounds, tol=tol, loose_tol=loose_tol,
                     adaptive_damping=adaptive_damping,
-                    server_order=server_order, seed=seed)
+                    server_order=server_order, seed=seed, accel=accel)
     fill_fn = make_server_fill(problem, level_gamma, mode, fill=fill)
     if sweeps:
         bucket_calls = 0

@@ -58,21 +58,23 @@ def solve_psdsf_rdm(
     server_order: str = "fixed",
     fill: str = "event",
     layout: str = "auto",
+    accel: str = "none",
 ) -> tuple[Allocation, SolveInfo]:
     """PS-DSF under RDM: sweep servers until fixed point of the rebuild map
     (see ``placement.sweep_fixed_point`` for the damping/acceptance
     contract, ``placement.solve_with_placement`` for the strategies,
     ``placement.server_fill_rdm_bisect`` for the sort-free ``fill="bisect"``
-    engine, and ``placement.sweep_fixed_point_bucketed`` for the
+    engine, ``placement.sweep_fixed_point_bucketed`` for the
     ``layout="bucketed"`` O(nnz) active-set sweep ``layout="auto"``
-    resolves to by density — identical fixed points, parity-gated in
-    tests)."""
+    resolves to by density, and ``placement._anderson_fixed_point`` for the
+    safeguarded ``accel="anderson"`` outer-iteration accelerator —
+    identical fixed points, parity-gated in tests)."""
     g = gamma_matrix(problem)
     return solve_with_placement(
         problem, g, placement=placement, mode="rdm", per_server_rates=True,
         scale=g.max(initial=1.0), x0=x0, max_rounds=max_rounds, tol=tol,
         loose_tol=loose_tol, adaptive_damping=adaptive_damping,
-        server_order=server_order, fill=fill, layout=layout)
+        server_order=server_order, fill=fill, layout=layout, accel=accel)
 
 
 def solve_psdsf_tdm(
@@ -86,16 +88,17 @@ def solve_psdsf_tdm(
     server_order: str = "fixed",
     fill: str = "event",
     layout: str = "auto",
+    accel: str = "none",
 ) -> tuple[Allocation, SolveInfo]:
     """PS-DSF under TDM (Def. 4 feasibility). Same adaptive damping,
-    approximate-convergence contract and ``fill=`` engine axis as the RDM
-    solver."""
+    approximate-convergence contract and ``fill=``/``accel=`` engine axes
+    as the RDM solver."""
     g = gamma_matrix(problem)
     return solve_with_placement(
         problem, g, placement=placement, mode="tdm", per_server_rates=True,
         scale=g.max(initial=1.0), x0=x0, max_rounds=max_rounds, tol=tol,
         loose_tol=loose_tol, adaptive_damping=adaptive_damping,
-        server_order=server_order, fill=fill, layout=layout)
+        server_order=server_order, fill=fill, layout=layout, accel=accel)
 
 
 # ---------------------------------------------------------------------------

@@ -262,9 +262,111 @@ def _fill_one_server_tdm_bisect(demands, phi, gamma_i, x_ext):
                      phi * gamma_i * jnp.maximum(0.0, level - floor), 0.0)
 
 
+def _anderson_rounds(one_round, x0, max_rounds, tol, scale, alpha0):
+    """Safeguarded limited-memory Anderson mixing over a jitted sweep map —
+    the traced twin of ``placement._anderson_fixed_point``, sharing its
+    contract: ``one_round(x, alpha) -> (x_new, resid)`` applies ONE full
+    damped sweep and reports its full-sweep residual; mixed steps are
+    accepted only when one plain sweep from the candidate DECREASES that
+    residual, so the certified residual is always a genuine full-sweep
+    residual (never the mixer's extrapolated one) and a rejected candidate
+    restarts the history from the latest plain pair.
+
+    Where the numpy reference keeps Python lists and calls
+    ``numpy.linalg.lstsq``, this keeps fixed-shape rolling history buffers
+    (``jnp.roll`` + masked difference columns, history depth
+    ``placement.ANDERSON_MEMORY``) and solves the least squares by QR with
+    a diagonal guard deactivating dead columns — everything shape-static so
+    the whole loop lives inside one ``lax.while_loop`` and vmaps across
+    batched problems. Every sweep (plain or safeguard evaluation) counts
+    one round, so rounds-to-tol comparisons against ``accel="none"`` are
+    sweep-for-sweep honest; a mixing attempt is skipped (masked to a
+    no-op) once the round budget cannot afford its evaluation sweep.
+
+    Returns ``(x, rounds, resid, accel_hits, accel_rejects)``.
+    """
+    from jax.scipy.linalg import solve_triangular
+
+    from .placement import ANDERSON_MEMORY
+    # clamp memory below the flattened problem size so the reduced-QR R
+    # factor stays square (tiny worked-example instances have size < m);
+    # x0.size is a static shape attribute, known at trace time
+    m = min(ANDERSON_MEMORY, max(x0.size - 1, 1))
+    dt = x0.dtype
+    shape = x0.shape
+    cols = jnp.arange(m, dtype=jnp.int32)
+
+    def cond(carry):
+        _, rounds, _, _, resid = carry[:5]
+        return (rounds < max_rounds) & (resid > tol * scale)
+
+    def body(carry):
+        x, rounds, prev_norm, alpha, _, hf, hg, hlen, hits, rejects = carry
+        g_x, resid_p = one_round(x, alpha)
+        f = (g_x - x).ravel()
+        hf = jnp.roll(hf, -1, axis=0).at[-1].set(f)
+        hg = jnp.roll(hg, -1, axis=0).at[-1].set(g_x.ravel())
+        hlen = jnp.minimum(hlen + 1, m + 1)
+        rounds = rounds + 1
+        can_mix = ((hlen >= 2) & (resid_p > tol * scale)
+                   & (rounds < max_rounds))
+        # difference columns over the valid window; rolled-in slots beyond
+        # the history length are masked to exact zeros (dead columns)
+        col_ok = (cols >= (m + 1 - hlen)).astype(dt)
+        df = (hf[1:] - hf[:-1]).T * col_ok[None, :]
+        dg = (hg[1:] - hg[:-1]).T * col_ok[None, :]
+        q, r = jnp.linalg.qr(df)
+        diag = jnp.abs(jnp.diagonal(r))
+        ref = jnp.maximum(diag.max(), jnp.asarray(1e-30, dt))
+        # dead/degenerate columns get an O(scale) diagonal so the solve
+        # stays finite; their dG columns are zero (or the safeguard
+        # rejects), so the inflated theta components are inert
+        r = r + jnp.diag(jnp.where(diag < 1e-12 * ref, ref,
+                                   jnp.asarray(0.0, dt)))
+        theta = solve_triangular(r, q.T @ f, lower=False)
+        cand = jnp.maximum(hg[-1] - dg @ theta, 0.0).reshape(shape)
+        g_c, resid_c = one_round(cand, alpha)
+        accept = can_mix & jnp.isfinite(resid_c) & (resid_c < resid_p)
+        reject = can_mix & ~accept
+        rounds = jnp.where(can_mix, rounds + 1, rounds)
+        hf_acc = jnp.roll(hf, -1, axis=0).at[-1].set((g_c - cand).ravel())
+        hg_acc = jnp.roll(hg, -1, axis=0).at[-1].set(g_c.ravel())
+        hf = jnp.where(accept, hf_acc, hf)
+        hg = jnp.where(accept, hg_acc, hg)
+        hlen = jnp.where(accept, jnp.minimum(hlen + 1, m + 1),
+                         jnp.where(reject, jnp.asarray(1, jnp.int32), hlen))
+        x_next = jnp.where(accept, g_c, g_x)
+        resid = jnp.where(accept, resid_c, resid_p)
+        hits = hits + accept.astype(jnp.int32)
+        rejects = rejects + reject.astype(jnp.int32)
+        # same alpha-normalized stall schedule as the plain cores
+        norm = resid / alpha
+        stall = (rounds >= 3) & (norm > 0.9 * prev_norm) & (alpha > 0.01)
+        alpha = jnp.where(stall, alpha * 0.7, alpha)
+        return (x_next, rounds, norm, alpha, resid, hf, hg, hlen, hits,
+                rejects)
+
+    big = jnp.array(jnp.inf, dtype=dt)
+    zeros_h = jnp.zeros((m + 1, x0.size), dt)
+    x, rounds, _, _, resid, _, _, _, hits, rejects = jax.lax.while_loop(
+        cond, body,
+        (x0, jnp.array(0), big, jnp.array(alpha0, dt), big, zeros_h,
+         zeros_h, jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32),
+         jnp.asarray(0, jnp.int32)))
+    return x, rounds, resid, hits, rejects
+
+
+def _check_accel(accel: str) -> None:
+    """Trace-time gate for the ``accel`` axis shared by the jitted entry
+    points (the numpy sweeps validate against the same
+    ``placement.ACCEL_ENGINES`` tuple)."""
+    if accel not in ("none", "anderson"):
+        raise ValueError(f"accel must be 'none' or 'anderson': {accel!r}")
+
+
 def _solve_core(demands, capacities, weights, gamma, x0, mode, max_rounds,
                 tol, servers=None, alpha0=1.0, scale=None, fill="event",
-                round_mode="gauss"):
+                round_mode="gauss", accel="none"):
     """Traced solver body shared by the single and batched entry points.
 
     All array arguments are positional so ``jax.vmap`` maps over them
@@ -299,6 +401,11 @@ def _solve_core(demands, capacities, weights, gamma, x0, mode, max_rounds,
     the cycle amplitude proportionally to ``a``, so the schedule lets ``a``
     fall to 0.01 (a 100x residual reduction) once the residual stops
     contracting; exact small instances converge before any damping starts.
+
+    ``accel="anderson"`` wraps the damped sweep in safeguarded Anderson
+    mixing (``_anderson_rounds``) and returns the extended tuple
+    (x, rounds, residual, accel_hits, accel_rejects); the default
+    ``"none"`` keeps the historical while_loop (and 3-tuple) byte-for-byte.
     """
     scale = jnp.maximum(1.0, gamma.max() if scale is None else scale)
     k = gamma.shape[1]
@@ -310,6 +417,7 @@ def _solve_core(demands, capacities, weights, gamma, x0, mode, max_rounds,
     if round_mode not in ("gauss", "jacobi"):
         raise ValueError(
             f"round must be 'gauss' or 'jacobi': {round_mode!r}")
+    _check_accel(accel)
 
     def fill_server(i, x_ext):
         if mode == "rdm":
@@ -340,6 +448,14 @@ def _solve_core(demands, capacities, weights, gamma, x0, mode, max_rounds,
                 return x.at[:, i].set((1.0 - alpha) * x[:, i] + alpha * xi)
             return jax.lax.fori_loop(0, sweep.shape[0], per_server, x)
 
+    if accel == "anderson":
+        def acc_round(x, alpha):
+            x_new = one_round(x, alpha)
+            return x_new, jnp.abs(x_new - x).max()
+
+        return _anderson_rounds(acc_round, x0, max_rounds, tol, scale,
+                                alpha0)
+
     def cond(carry):
         _, rounds, _, _, resid = carry
         return (rounds < max_rounds) & (resid > tol * scale)
@@ -365,7 +481,8 @@ def _solve_core(demands, capacities, weights, gamma, x0, mode, max_rounds,
 
 def _solve_core_bucketed(demands, capacities, weights, gamma, x0, idx, mask,
                          mode, max_rounds, tol, servers=None, alpha0=1.0,
-                         scale=None, fill="event", round_mode="gauss"):
+                         scale=None, fill="event", round_mode="gauss",
+                         accel="none"):
     """Bucketed twin of ``_solve_core`` for sparse eligibility.
 
     ``idx``/``mask`` are a ``layout.BucketedLayout``'s padded (K, Bmax)
@@ -385,9 +502,12 @@ def _solve_core_bucketed(demands, capacities, weights, gamma, x0, idx, mask,
     sums are re-derived from the buckets at every round start, mirroring
     the dense sweep's one-reduction-per-round robustness.
 
-    ``servers``/``alpha0``/``scale``/``fill``/``round_mode`` as in
-    ``_solve_core``; fixed points are identical (parity-gated at 1e-9 by
-    tests/test_layout.py). Returns (x dense (N, K), rounds, residual).
+    ``servers``/``alpha0``/``scale``/``fill``/``round_mode``/``accel`` as
+    in ``_solve_core``; fixed points are identical (parity-gated at 1e-9 by
+    tests/test_layout.py). Returns (x dense (N, K), rounds, residual), plus
+    (accel_hits, accel_rejects) under ``accel="anderson"`` — the mixing
+    state is the packed (K, Bmax) bucket tensor, so history memory scales
+    with nnz, not N*K.
     """
     scale = jnp.maximum(1.0, gamma.max() if scale is None else scale)
     n, k = gamma.shape
@@ -400,6 +520,7 @@ def _solve_core_bucketed(demands, capacities, weights, gamma, x0, idx, mask,
     if round_mode not in ("gauss", "jacobi"):
         raise ValueError(
             f"round must be 'gauss' or 'jacobi': {round_mode!r}")
+    _check_accel(accel)
 
     gam_b = jnp.where(mask, jnp.take_along_axis(gamma.T, idx, axis=1), 0.0)
     dem_b = demands[idx]                                   # (K, Bmax, R)
@@ -451,29 +572,35 @@ def _solve_core_bucketed(demands, capacities, weights, gamma, x0, idx, mask,
                 (xb, xsum, jnp.asarray(0.0, dt)))
             return xb, resid
 
-    def cond(carry):
-        _, rounds, _, _, resid = carry
-        return (rounds < max_rounds) & (resid > tol * scale)
+    if accel == "anderson":
+        xb, rounds, resid, hits, rejects = _anderson_rounds(
+            one_round, xb0, max_rounds, tol, scale, alpha0)
+        stats = (hits, rejects)
+    else:
+        def cond(carry):
+            _, rounds, _, _, resid = carry
+            return (rounds < max_rounds) & (resid > tol * scale)
 
-    def body(carry):
-        xb, rounds, prev_norm, alpha, _ = carry
-        xb_new, resid = one_round(xb, alpha)
-        # same alpha-normalized stall schedule as the dense core
-        norm = resid / alpha
-        stall = (rounds >= 3) & (norm > 0.9 * prev_norm) & (alpha > 0.01)
-        alpha = jnp.where(stall, alpha * 0.7, alpha)
-        return xb_new, rounds + 1, norm, alpha, resid
+        def body(carry):
+            xb, rounds, prev_norm, alpha, _ = carry
+            xb_new, resid = one_round(xb, alpha)
+            # same alpha-normalized stall schedule as the dense core
+            norm = resid / alpha
+            stall = (rounds >= 3) & (norm > 0.9 * prev_norm) & (alpha > 0.01)
+            alpha = jnp.where(stall, alpha * 0.7, alpha)
+            return xb_new, rounds + 1, norm, alpha, resid
 
-    big = jnp.array(jnp.inf, dtype=dt)
-    xb, rounds, _, _, resid = jax.lax.while_loop(
-        cond, body, (xb0, jnp.array(0), big, jnp.array(alpha0, dt), big))
+        big = jnp.array(jnp.inf, dtype=dt)
+        xb, rounds, _, _, resid = jax.lax.while_loop(
+            cond, body, (xb0, jnp.array(0), big, jnp.array(alpha0, dt), big))
+        stats = ()
     cols = jnp.broadcast_to(jnp.arange(k, dtype=idx.dtype)[:, None],
                             idx.shape)
     # scatter-ADD, not set: a row's real ids are distinct, but batch-padded
     # buckets replicate id 0 in the padding, and a colliding .set picks an
     # unspecified writer — masked padding adds an exact 0.0 instead
     x = jnp.zeros((n, k), dt).at[idx, cols].add(jnp.where(mask, xb, 0.0))
-    return x, rounds, resid
+    return (x, rounds, resid) + stats
 
 
 def _solve_dtype(demands):
@@ -603,13 +730,15 @@ def _check_buckets(layout: str, buckets) -> None:
 
 @functools.partial(jax.jit,
                    static_argnames=("mode", "max_rounds", "placement",
-                                    "fill", "round", "layout"))
+                                    "fill", "round", "layout", "accel"))
 def psdsf_solve_jax(demands, capacities, weights, gamma, *, x0=None,
                     mode: str = "rdm", max_rounds: int = 256,
                     tol: float = 1e-6, placement: str = "level",
                     fill: str = "event", round: str = "gauss",
-                    layout: str = "dense", buckets=None):
-    """Solve PS-DSF. Returns (x (N,K), rounds, residual).
+                    layout: str = "dense", buckets=None,
+                    accel: str = "none"):
+    """Solve PS-DSF. Returns (x (N,K), rounds, residual) — plus
+    (accel_hits, accel_rejects) when ``accel="anderson"``.
 
     ``gamma`` is the (N, K) eligibility-masked monopolization matrix; compute
     it with ``repro.core.gamma_matrix`` (or its jnp twin below). Damping
@@ -639,9 +768,16 @@ def psdsf_solve_jax(demands, capacities, weights, gamma, *, x0=None,
     ``layout.BucketedLayout``'s padded arrays) runs the O(nnz) bucketed
     sweep ``_solve_core_bucketed`` — same fixed point, gated >= 3x on the
     pinned sparse instance. The headroom repack stays dense either way.
+
+    ``accel="anderson"`` runs the safeguarded Anderson-mixed outer
+    iteration (``_anderson_rounds``) and extends the return tuple with
+    (accel_hits, accel_rejects); the headroom repack refills stay plain —
+    they are warm re-sweeps already at the fixed point, where mixing has
+    nothing to extrapolate.
     """
     _check_placement(placement)
     _check_buckets(layout, buckets)
+    _check_accel(accel)
     n, k = gamma.shape
     dtype = _solve_dtype(demands)
     if x0 is None:
@@ -651,26 +787,28 @@ def psdsf_solve_jax(demands, capacities, weights, gamma, *, x0=None,
         out = _solve_core_bucketed(demands, capacities, weights, gamma,
                                    x0.astype(dtype), idx, mask, mode,
                                    max_rounds, tol, fill=fill,
-                                   round_mode=round)
+                                   round_mode=round, accel=accel)
     else:
         out = _solve_core(demands, capacities, weights, gamma,
                           x0.astype(dtype), mode, max_rounds, tol, fill=fill,
-                          round_mode=round)
+                          round_mode=round, accel=accel)
     if placement == "headroom":
-        out = _repack_refill_core(demands, capacities, weights, gamma, *out,
-                                  mode, max_rounds, tol, fill=fill,
-                                  round_mode=round)
+        fixed = _repack_refill_core(demands, capacities, weights, gamma,
+                                    *out[:3], mode, max_rounds, tol,
+                                    fill=fill, round_mode=round)
+        out = fixed + out[3:]
     return out
 
 
 @functools.partial(jax.jit,
                    static_argnames=("mode", "max_rounds", "placement",
-                                    "fill", "round", "layout"))
+                                    "fill", "round", "layout", "accel"))
 def psdsf_solve_batched(demands, capacities, weights, gamma, *, x0=None,
                         mode: str = "rdm", max_rounds: int = 256,
                         tol: float = 1e-6, placement: str = "level",
                         fill: str = "event", round: str = "gauss",
-                        layout: str = "dense", buckets=None):
+                        layout: str = "dense", buckets=None,
+                        accel: str = "none"):
     """Solve B independent PS-DSF problems in one jitted call.
 
     Shapes: demands (B, N, R), capacities (B, K, R), weights (B, N),
@@ -679,13 +817,16 @@ def psdsf_solve_batched(demands, capacities, weights, gamma, *, x0=None,
     converged problem's carry stops updating under the vmapped while_loop).
 
     Pad heterogeneous problems with ``batch_problems``; padding is inert
-    (see module docstring). ``placement``/``fill``/``round`` as in
-    ``psdsf_solve_jax``. ``layout="bucketed"`` takes per-problem buckets
+    (see module docstring). ``placement``/``fill``/``round``/``accel`` as
+    in ``psdsf_solve_jax`` (``accel="anderson"`` appends per-problem
+    (accel_hits, accel_rejects) vectors to the return tuple).
+    ``layout="bucketed"`` takes per-problem buckets
     — (B, K, Bmax) idx/mask stacks (pad each problem's layout to a common
     Bmax with masked slots; padding is inert like the user/server padding).
     """
     _check_placement(placement)
     _check_buckets(layout, buckets)
+    _check_accel(accel)
     b, n, k = gamma.shape
     dtype = _solve_dtype(demands)
     if x0 is None:
@@ -697,10 +838,12 @@ def psdsf_solve_batched(demands, capacities, weights, gamma, *, x0=None,
         def solve_b(d, c, w, g, x0_, idx_, mask_):
             out = _solve_core_bucketed(d, c, w, g, x0_, idx_, mask_, mode,
                                        max_rounds, tol, fill=fill,
-                                       round_mode=round)
+                                       round_mode=round, accel=accel)
             if placement == "headroom":
-                out = _repack_refill_core(d, c, w, g, *out, mode, max_rounds,
-                                          tol, fill=fill, round_mode=round)
+                fixed = _repack_refill_core(d, c, w, g, *out[:3], mode,
+                                            max_rounds, tol, fill=fill,
+                                            round_mode=round)
+                out = fixed + out[3:]
             return out
 
         return jax.vmap(solve_b)(demands, capacities, weights, gamma,
@@ -708,10 +851,12 @@ def psdsf_solve_batched(demands, capacities, weights, gamma, *, x0=None,
 
     def solve(d, c, w, g, x0_):
         out = _solve_core(d, c, w, g, x0_, mode, max_rounds, tol, fill=fill,
-                          round_mode=round)
+                          round_mode=round, accel=accel)
         if placement == "headroom":
-            out = _repack_refill_core(d, c, w, g, *out, mode, max_rounds,
-                                      tol, fill=fill, round_mode=round)
+            fixed = _repack_refill_core(d, c, w, g, *out[:3], mode,
+                                        max_rounds, tol, fill=fill,
+                                        round_mode=round)
+            out = fixed + out[3:]
         return out
 
     return jax.vmap(solve)(demands, capacities, weights, gamma,
@@ -720,12 +865,13 @@ def psdsf_solve_batched(demands, capacities, weights, gamma, *, x0=None,
 
 @functools.partial(jax.jit,
                    static_argnames=("mode", "max_rounds", "placement",
-                                    "fill", "round", "layout"))
+                                    "fill", "round", "layout", "accel"))
 def psdsf_resolve_batched(demands, capacities, weights, gamma, x0, servers, *,
                           mode: str = "rdm", max_rounds: int = 64,
                           tol: float = 1e-4, placement: str = "level",
                           fill: str = "event", round: str = "gauss",
-                          layout: str = "dense", buckets=None):
+                          layout: str = "dense", buckets=None,
+                          accel: str = "none"):
     """Event-driven incremental re-solve of B perturbed problems.
 
     ``servers`` (B, S) int32 lists the servers each scenario's events touch
@@ -746,10 +892,15 @@ def psdsf_resolve_batched(demands, capacities, weights, gamma, x0, servers, *,
     phases, as in ``psdsf_solve_jax``; ``layout="bucketed"`` (with
     (B, K, Bmax) ``buckets``) runs BOTH the restricted and the
     verification phase on the bucketed core — the restricted+verify
-    exactness contract is layout-independent.
+    exactness contract is layout-independent. ``accel="anderson"`` runs the
+    safeguarded Anderson mixer in BOTH phases and appends summed
+    (accel_hits, accel_rejects) to the return tuple — this is where the
+    axis pays off most: a warm re-solve near a limit cycle finally
+    contracts instead of re-orbiting.
     """
     _check_placement(placement)
     _check_buckets(layout, buckets)
+    _check_accel(accel)
 
     def one(d, c, w, g, x0_, srv, *bkt):
         def core(x_init, servers=None, alpha0=1.0):
@@ -757,25 +908,30 @@ def psdsf_resolve_batched(demands, capacities, weights, gamma, x0, servers, *,
                 return _solve_core_bucketed(
                     d, c, w, g, x_init, bkt[0], bkt[1], mode, max_rounds,
                     tol, servers=servers, alpha0=alpha0, fill=fill,
-                    round_mode=round)
+                    round_mode=round, accel=accel)
             return _solve_core(d, c, w, g, x_init, mode, max_rounds, tol,
                                servers=servers, alpha0=alpha0, fill=fill,
-                               round_mode=round)
+                               round_mode=round, accel=accel)
 
         # The warm start is near the fixed point; alpha0 = 0.3 is enough to
         # absorb a cell-local perturbation in a few sweeps without fully
         # re-exciting the restricted subproblem's limit cycle.
-        x, r_restricted, _ = core(x0_, servers=srv, alpha0=0.3)
+        out1 = core(x0_, servers=srv, alpha0=0.3)
+        x, r_restricted = out1[0], out1[1]
         # Verification starts pre-damped at alpha ~ the level where a cold
         # solve's own schedule accepts (resid ~ alpha * cycle amplitude
         # crosses tol around alpha ~ 0.02 at scheduler tolerance), so
         # incremental and cold solves end with equal-strength certificates;
         # an undamped full sweep here would just re-excite the limit cycle.
-        x, r_full, resid = core(x, alpha0=0.02)
+        out2 = core(x, alpha0=0.02)
+        x, r_full, resid = out2[0], out2[1], out2[2]
         if placement == "headroom":
             x, r_full, resid = _repack_refill_core(
                 d, c, w, g, x, r_full, resid, mode, max_rounds, tol,
                 fill=fill, round_mode=round)
+        if accel == "anderson":
+            return (x, r_restricted, r_full, resid,
+                    out1[3] + out2[3], out1[4] + out2[4])
         return x, r_restricted, r_full, resid
 
     x0c = x0.astype(_solve_dtype(demands))
@@ -839,27 +995,32 @@ def gamma_matrix_jnp(demands, capacities, eligibility):
 
 def solve_psdsf_rdm_jax(problem: AllocationProblem, x0=None,
                         max_rounds: int = 64, fill: str = "event",
-                        round: str = "gauss") -> Allocation:
+                        round: str = "gauss",
+                        accel: str = "none") -> Allocation:
     """Convenience wrapper producing the same container as the numpy solver
-    (``fill``/``round`` select the fill engine and outer iteration)."""
+    (``fill``/``round``/``accel`` select the fill engine, outer iteration
+    and outer-iteration accelerator)."""
     g = gamma_matrix(problem)
-    x, _, _ = psdsf_solve_jax(
+    x, *_ = psdsf_solve_jax(
         jnp.asarray(problem.demands), jnp.asarray(problem.capacities),
         jnp.asarray(problem.weights), jnp.asarray(g),
         x0=None if x0 is None else jnp.asarray(x0),
-        mode="rdm", max_rounds=max_rounds, fill=fill, round=round)
+        mode="rdm", max_rounds=max_rounds, fill=fill, round=round,
+        accel=accel)
     return Allocation(problem, np.asarray(x, dtype=np.float64))
 
 
 def solve_psdsf_tdm_jax(problem: AllocationProblem, x0=None,
                         max_rounds: int = 64, fill: str = "event",
-                        round: str = "gauss") -> Allocation:
+                        round: str = "gauss",
+                        accel: str = "none") -> Allocation:
     """PS-DSF under time-division multiplexing on the jitted jax backend
     (continuous task fractions; RDM variant is ``solve_psdsf_rdm_jax``)."""
     g = gamma_matrix(problem)
-    x, _, _ = psdsf_solve_jax(
+    x, *_ = psdsf_solve_jax(
         jnp.asarray(problem.demands), jnp.asarray(problem.capacities),
         jnp.asarray(problem.weights), jnp.asarray(g),
         x0=None if x0 is None else jnp.asarray(x0),
-        mode="tdm", max_rounds=max_rounds, fill=fill, round=round)
+        mode="tdm", max_rounds=max_rounds, fill=fill, round=round,
+        accel=accel)
     return Allocation(problem, np.asarray(x, dtype=np.float64))

@@ -73,6 +73,11 @@ class ChurnRecord:
     layout_rebuilds: int = 0  # bucket rebuilds this step (arrivals outside
     #                           the layout rebuild loudly; departures only
     #                           mask buckets in place)
+    # outer-iteration accelerator observability (mirrors SolveInfo.accel*):
+    accel: str = "none"      # accelerator the re-solve swept under
+    accel_hits: int = 0      # accepted Anderson candidates this step
+    accel_rejects: int = 0   # safeguard fallbacks this step
+    rounds_to_tol: int = 0   # rounds to the TIGHT tol (0 if not reached)
 
 
 #: sweep-based mechanisms the simulator can maintain a fixed point for
@@ -104,7 +109,12 @@ class ChurnSimulator:
     ``fill`` ("event"/"bisect") and ``round`` ("gauss"/"jacobi") pick the
     per-server fill engine and outer iteration of the jitted sweep (see
     ``psdsf_jax._solve_core``); each record reports them back as
-    ``fill_engine``/``fill_iters``.
+    ``fill_engine``/``fill_iters``. ``accel`` ("none"/"anderson") threads
+    the safeguarded outer-iteration accelerator into every warm re-solve
+    (``psdsf_jax._anderson_rounds``) — this is where it earns its keep:
+    a warm start near a limit cycle finally contracts instead of
+    re-orbiting — with per-step ``accel_hits``/``accel_rejects``/
+    ``rounds_to_tol`` mirrored on each record.
 
     ``layout`` ("dense"/"bucketed"/"auto") picks the sweep's data layout
     (``core.layout``): bucketed sweeps each server's eligibility bucket —
@@ -122,11 +132,12 @@ class ChurnSimulator:
                  telemetry: bool = True, interpret_vds: bool = True,
                  mechanism: Optional[str] = None, placement: str = "level",
                  fill: str = "event", round: str = "gauss",
-                 layout: str = "auto"):
+                 layout: str = "auto", accel: str = "none"):
         import jax.numpy as jnp
 
         from repro.core.layout import LAYOUTS, resolve_layout
-        from repro.core.placement import FILL_ENGINES, get_placement
+        from repro.core.placement import (ACCEL_ENGINES, FILL_ENGINES,
+                                          get_placement)
 
         if mode is not None and mechanism is not None:
             raise ValueError(
@@ -149,11 +160,15 @@ class ChurnSimulator:
             raise ValueError(f"fill must be one of {FILL_ENGINES}: {fill!r}")
         if round not in ("gauss", "jacobi"):
             raise ValueError(f"round must be 'gauss' or 'jacobi': {round!r}")
+        if accel not in ACCEL_ENGINES:
+            raise ValueError(f"accel must be one of {ACCEL_ENGINES}: "
+                             f"{accel!r}")
         self.problem = problem
         self.mechanism = mechanism
         self.placement = placement
         self.fill = fill
         self.round = round
+        self.accel = accel
         self.warm_start = warm_start
         self.compare_cold = compare_cold
         self.max_rounds = max_rounds
@@ -224,12 +239,12 @@ class ChurnSimulator:
         elif ev.kind == "restore":
             self.cap_scale[ev.server] = 1.0
 
-    def _solve(self, x0) -> tuple[np.ndarray, int, float]:
+    def _solve(self, x0) -> tuple[np.ndarray, int, float, int, int]:
         import jax.numpy as jnp
         if (self.placement == "lexmm"
                 and self.mechanism not in ("psdsf-rdm", "psdsf-tdm")):
             return self._solve_lexmm_host()
-        x, rounds, resid = self._resolve(
+        out = self._resolve(
             self._demands, self._caps, self._weights, self._elig,
             jnp.asarray(self.active), jnp.asarray(self.cap_scale, jnp.float32),
             None if x0 is None else jnp.asarray(x0, jnp.float32),
@@ -237,10 +252,15 @@ class ChurnSimulator:
             tol=self.tol, placement=self.placement, fill=self.fill,
             round=self.round, layout=self.layout,
             buckets=(None if self._blayout is None
-                     else (self._idx_j, self._mask_j)))
-        return np.array(x, dtype=np.float64), int(rounds), float(resid)
+                     else (self._idx_j, self._mask_j)),
+            accel=self.accel)
+        x, rounds, resid = out[0], out[1], out[2]
+        hits, rejects = ((int(out[3]), int(out[4]))
+                         if self.accel == "anderson" else (0, 0))
+        return (np.array(x, dtype=np.float64), int(rounds), float(resid),
+                hits, rejects)
 
-    def _solve_lexmm_host(self) -> tuple[np.ndarray, int, float]:
+    def _solve_lexmm_host(self) -> tuple[np.ndarray, int, float, int, int]:
         """Exact flow-routed re-solve for the global-share mechanisms: the
         lexmm certificates are host-side LP solves (no XLA mirror), so the
         tick hands the event delta to a persistent ``RouterState`` instead
@@ -270,7 +290,7 @@ class ChurnSimulator:
             self._lexmm_router = router
         x, stats = router.resolve(active=self.active)
         self._router_stats = stats
-        return x, stats.stages, 0.0
+        return x, stats.stages, 0.0, 0, 0
 
     def step(self, events: Sequence[ChurnEvent], time_now: float
              ) -> ChurnRecord:
@@ -287,12 +307,13 @@ class ChurnSimulator:
             rebuilds = 1
         self._router_stats = None
         t0 = _time.perf_counter()
-        x, rounds, resid = self._solve(self.x if self.warm_start else None)
+        x, rounds, resid, hits, rejects = self._solve(
+            self.x if self.warm_start else None)
         solve_ms = (_time.perf_counter() - t0) * 1e3
         rs = self._router_stats          # lexmm ticks only, else None
         cold_rounds = -1
         if self.compare_cold and self.warm_start:
-            _, cold_rounds, _ = self._solve(None)
+            _, cold_rounds, *_ = self._solve(None)
         self.x = x
         mn, arg = (self._min_vds() if self.telemetry else (np.inf, -1))
         from repro.core.placement import fill_iter_budget
@@ -303,6 +324,14 @@ class ChurnSimulator:
             self.problem.num_resources,
             "tdm" if self.mechanism == "psdsf-tdm" else "rdm", self.fill)
             if swept else 0)
+        # tight-tol certification against the same active-gamma scale the
+        # traced sweep accepts on (routed/lexmm ticks are one-shot exact)
+        if swept:
+            g_act = np.where(self.active[:, None],
+                             gamma_matrix(self._effective_problem()), 0.0)
+            tight = resid <= self.tol * float(g_act.max(initial=1.0))
+        else:
+            tight = resid == 0.0
         return ChurnRecord(
             time=time_now, n_events=len(events), rounds=rounds,
             cold_rounds=cold_rounds, residual=resid,
@@ -318,7 +347,10 @@ class ChurnSimulator:
             layout=self.layout if swept else "dense",
             bucket_max=(self._blayout.bucket_max if swept
                         and self._blayout is not None else 0),
-            layout_rebuilds=rebuilds)
+            layout_rebuilds=rebuilds,
+            accel=self.accel if swept else "none",
+            accel_hits=hits, accel_rejects=rejects,
+            rounds_to_tol=rounds if tight else 0)
 
     def run(self, events: Sequence[ChurnEvent]) -> List[ChurnRecord]:
         """Consume a whole stream: batch same-timestamp events, one re-solve
@@ -368,15 +400,18 @@ def _resolve_fn():
 
     from repro.core.baselines_jax import (_routed_fill_core,
                                           level_rate_matrix_jnp)
-    from repro.core.psdsf_jax import (_repack_refill_core, _solve_core,
-                                      _solve_core_bucketed, gamma_matrix_jnp)
+    from repro.core.psdsf_jax import (_check_accel, _repack_refill_core,
+                                      _solve_core, _solve_core_bucketed,
+                                      gamma_matrix_jnp)
 
     @functools.partial(jax.jit, static_argnames=("mechanism", "max_rounds",
                                                  "placement", "fill",
-                                                 "round", "layout"))
+                                                 "round", "layout", "accel"))
     def resolve(demands, capacities, weights, eligibility, active, cap_scale,
                 x0, *, mechanism, max_rounds, tol, placement="level",
-                fill="event", round="gauss", layout="dense", buckets=None):
+                fill="event", round="gauss", layout="dense", buckets=None,
+                accel="none"):
+        _check_accel(accel)
         caps_eff = capacities * cap_scale[:, None]
         g = gamma_matrix_jnp(demands, caps_eff, eligibility)
         g = jnp.where(active[:, None], g, 0.0)
@@ -400,7 +435,11 @@ def _resolve_fn():
             if layout == "bucketed":
                 raise ValueError("routed headroom fill has no bucketed "
                                  "form; guarded in ChurnSimulator.__init__")
-            return _routed_fill_core(demands, caps_eff, weights, lg)
+            out = _routed_fill_core(demands, caps_eff, weights, lg)
+            if accel == "anderson":  # one-shot fill: nothing to accelerate
+                zero = jnp.asarray(0, jnp.int32)
+                out = out + (zero, zero)
+            return out
         if x0 is None:
             x0 = jnp.zeros(lg.shape, dtype=demands.dtype)
         x0 = jnp.where(active[:, None], x0, 0.0)
@@ -415,15 +454,17 @@ def _resolve_fn():
             out = _solve_core_bucketed(demands, caps_eff, weights, lg, x0,
                                        idx, mask & active[idx], mode,
                                        max_rounds, tol, scale=g.max(),
-                                       fill=fill, round_mode=round)
+                                       fill=fill, round_mode=round,
+                                       accel=accel)
         else:
             out = _solve_core(demands, caps_eff, weights, lg, x0, mode,
                               max_rounds, tol, scale=g.max(), fill=fill,
-                              round_mode=round)
+                              round_mode=round, accel=accel)
         if placement == "headroom":
-            out = _repack_refill_core(demands, caps_eff, weights, g, *out,
-                                      mode, max_rounds, tol, fill=fill,
-                                      round_mode=round)
+            fixed = _repack_refill_core(demands, caps_eff, weights, g,
+                                        *out[:3], mode, max_rounds, tol,
+                                        fill=fill, round_mode=round)
+            out = fixed + out[3:]
         return out
 
     return resolve

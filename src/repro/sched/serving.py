@@ -102,10 +102,11 @@ class DynamicDispatcher:
     """Asynchronous per-group PS-DSF ticks for tenant churn (Section III-D /
     the Section V experiment, at the serving layer).
 
-    ``engine``/``precision``/``placement``/``fill``/``layout`` thread
-    straight through to ``DistributedPSDSF`` (the jitted tick engine, its
-    dtype, the placement strategy, the per-server fill engine and the
-    dense/bucketed sweep layout), matching the
+    ``engine``/``precision``/``placement``/``fill``/``layout``/``accel``
+    thread straight through to ``DistributedPSDSF`` (the jitted tick
+    engine, its dtype, the placement strategy, the per-server fill engine,
+    the dense/bucketed sweep layout and the tick-to-tick Anderson
+    accelerator), matching the
     knobs ``ChurnSimulator`` and ``admitted_rates`` already expose — a
     dispatcher ticked to equilibrium reproduces
     ``admitted_rates(..., mechanism="psdsf-<mode>")`` quotas
@@ -116,13 +117,13 @@ class DynamicDispatcher:
                  tenants: Sequence[Tenant], mode: str = "rdm",
                  engine: str = "numpy", precision: str = "highest",
                  placement: str = "level", fill: str = "event",
-                 layout: str = "auto"):
+                 layout: str = "auto", accel: str = "none"):
         self.groups = list(groups)
         self.tenants = list(tenants)
         self.sim = DistributedPSDSF(dispatch_problem(groups, tenants), mode,
                                     engine=engine, precision=precision,
                                     placement=placement, fill=fill,
-                                    layout=layout)
+                                    layout=layout, accel=accel)
 
     def set_active(self, tenant_name: str, active: bool):
         """Tenant arrival/departure by name (delegates to the simulator)."""
